@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks.
+
+On CPU, Pallas interpret-mode wall time is meaningless, so this bench
+reports (a) wall time of the jnp oracle path (the XLA numbers the
+training stack actually runs on this host) and (b) the stage-1 DSE tile
+plans + modeled arithmetic intensity for the TPU target — the numbers
+the flex_gemm BlockSpecs are built from.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perf_model import plan_tpu_gemm_tiles
+from repro.kernels import ref
+
+GEMM_SHAPES = [(512, 512, 512), (3072, 4096, 4096), (197, 768, 2304),
+               (3072, 32, 1), (32, 256, 1024)]
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def main(emit) -> None:
+    rng = np.random.default_rng(0)
+    for (M, K, N) in GEMM_SHAPES:
+        a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        f = jax.jit(lambda x, y: ref.gemm(x, y))
+        dt = _time(f, a, b)
+        plan = plan_tpu_gemm_tiles(M, K, N, dtype_bytes=2)
+        emit(f"kernel.gemm.{M}x{K}x{N}", dt * 1e6,
+             f"us/call(cpu-oracle); tpu-tiles=({plan.block_m},"
+             f"{plan.block_k},{plan.block_n}),AI={plan.arithmetic_intensity:.0f}")
+    # sfu
+    x = jnp.asarray(rng.standard_normal((4096, 4096)), jnp.float32)
+    for name, fn in (("softmax", ref.softmax_rows),
+                     ("rmsnorm", ref.rmsnorm_rows)):
+        f = jax.jit(fn)
+        dt = _time(f, x)
+        emit(f"kernel.sfu.{name}.4096x4096", dt * 1e6, "us/call(cpu-oracle)")
+    # attention
+    q = jnp.asarray(rng.standard_normal((2, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 512, 64)), jnp.float32)
+    f = jax.jit(lambda q_, k_, v_: ref.mha_attention(q_, k_, v_))
+    dt = _time(f, q, k, k)
+    emit("kernel.attn.gqa.2x8x512x64", dt * 1e6, "us/call(cpu-oracle)")
+    # ssd
+    x = jnp.asarray(rng.standard_normal((2, 512, 8, 64)), jnp.float32)
+    a_ = jnp.asarray(-np.abs(rng.standard_normal((2, 512, 8))) * 0.1,
+                     jnp.float32)
+    bc = jnp.asarray(rng.standard_normal((2, 512, 1, 64)) * 0.3, jnp.float32)
+    f = jax.jit(lambda *t: ref.ssd_chunked(*t, chunk=128)[0])
+    dt = _time(f, x, a_, bc, bc)
+    emit("kernel.ssd.2x512x8x64", dt * 1e6, "us/call(cpu-oracle)")

@@ -1,0 +1,65 @@
+"""§Roofline: aggregate the dry-run records into the per-(arch x shape
+x mesh) three-term roofline table for EXPERIMENTS.md.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dry_dir: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append({"cell": f"{r['arch']}|{r['shape']}|{r['mesh']}",
+                         "status": r.get("status"),
+                         "reason": r.get("reason", r.get("error", ""))})
+            continue
+        rf = r["roofline"]
+        step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append({
+            "cell": f"{r['arch']}|{r['shape']}|{r['mesh']}",
+            "status": "ok",
+            "compute_s": rf["compute_s"],
+            "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bound": rf["bound"],
+            "step_s": step,
+            "roofline_fraction": (rf["compute_s"] / step) if step else 0.0,
+            "model_vs_hlo_flops": r.get("model_vs_hlo_flops"),
+            "mfu_upper_bound": (r.get("model_flops_per_chip", 0.0)
+                                / (step * 197e12)) if step else 0.0,
+        })
+    return rows
+
+
+def main(emit) -> None:
+    recs = load_records()
+    if not recs:
+        emit("roofline.records", 0, "run repro.launch.dryrun first")
+        return
+    rows = table(recs)
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in ok:
+        emit(f"roofline.{r['cell']}.step_s", r["step_s"],
+             f"bound={r['bound']},compute={r['compute_s']:.3f},"
+             f"mem={r['memory_s']:.3f},coll={r['collective_s']:.3f},"
+             f"mfu_ub={r['mfu_upper_bound']:.3f}")
+    emit("roofline.cells_ok", len(ok), f"of {len(rows)}")
+    if ok:
+        worst = min(ok, key=lambda r: r["mfu_upper_bound"])
+        emit("roofline.worst_cell", worst["mfu_upper_bound"], worst["cell"])

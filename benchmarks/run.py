@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_single_pe — Fig. 10 (single-PE efficiency vs op-count variation)
+  bench_e2e       — Fig. 11 / Fig. 1 (end-to-end GFLOPS vs CHARM/RSN
+                    + FP/FM ablations + simulator cross-check)
+  bench_dse       — Fig. 12 (DAG partitioning; GA vs MILP optimality)
+  bench_kernels   — kernel micro-bench + TPU tile plans
+  roofline        — §Roofline table from the dry-run artifacts
+
+Prints ``name,value,derived`` CSV.
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_dse, bench_e2e, bench_kernels,
+                            bench_single_pe, roofline)
+    mods = {
+        "single_pe": bench_single_pe,
+        "e2e": bench_e2e,
+        "dse": bench_dse,
+        "kernels": bench_kernels,
+        "roofline": roofline,
+    }
+    want = sys.argv[1:] or list(mods)
+    print("name,value,derived")
+
+    def emit(name, value, derived=""):
+        if isinstance(value, float):
+            value = f"{value:.6g}"
+        print(f"{name},{value},{derived}")
+
+    for key in want:
+        mods[key].main(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: compile a DNN workload with the DORA two-stage DSE,
+inspect the generated instruction stream, simulate its timing, and
+execute it — validating against the numpy oracle.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.configs import paper_models
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
+                        Policy, disassemble, simulate)
+
+
+def main() -> None:
+    # the paper's BERT-32 tiny model — the worst case for fixed-dataflow
+    # accelerators (Fig. 1 point e)
+    graph = paper_models.bert_s()
+    print(f"workload: {graph.name} — {len(graph.layers)} layers, "
+          f"{graph.total_flops / 1e9:.2f} GFLOP")
+
+    platform = DoraPlatform.vck190()     # 6 MMUs, 14 LMUs, 3 SFUs
+    compiler = DoraCompiler(platform, Policy.dora())
+    result = compiler.compile(graph, CompileOptions(
+        engine="milp", time_budget_s=5.0))
+
+    print(f"stage-1 DSE: {result.stage1_s * 1e3:.1f} ms, "
+          f"stage-2 ({'MILP' if result.optimal is not None else 'GA'}): "
+          f"{result.stage2_s * 1e3:.1f} ms, optimal={result.optimal}")
+    print(f"schedule makespan: {result.makespan_s * 1e3:.3f} ms "
+          f"-> {result.throughput_gflops:.1f} GFLOPS")
+    print(f"binary: {len(result.codegen.program)} instructions, "
+          f"{result.program_bytes} bytes")
+
+    print("\nfirst 12 instructions:")
+    head = disassemble(result.codegen.program).splitlines()[:12]
+    print("  " + "\n  ".join(head))
+
+    from repro.core import UnitKind
+    report = simulate(result.codegen, platform)
+    print(f"\nevent-driven simulation: makespan "
+          f"{report.makespan_s * 1e3:.3f} ms; MMU0 utilization "
+          f"{report.utilization((UnitKind.MMU, 0)) * 100:.0f}%")
+
+    inputs = graph.random_inputs(0)
+    out = compiler.execute(result, inputs)
+    ref = graph.reference_execute(inputs)
+    last = graph.layers[-1].name
+    err = float(np.max(np.abs(out[last] - ref[last])))
+    print(f"functional runtime vs oracle: max abs err {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

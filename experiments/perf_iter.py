@@ -1,0 +1,127 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing: re-lower one (arch x shape x mesh) cell with a
+named optimization and report the roofline-term deltas vs baseline.
+
+Levers (--opt, comma-separated):
+  seq_parallel   sequence-parallel TP (reduce-scatter/all-gather TP)
+  bf16_weights   serve with bf16 weights (decode/prefill cells)
+  no_remat       disable activation rematerialization
+  dots_remat     remat policy: save dot outputs (vs nothing_saveable)
+  bf16_moments   bf16 optimizer moments
+  no_fsdp        disable FSDP param sharding
+  fsdp           enable FSDP param sharding
+
+Usage:
+  PYTHONPATH=src python experiments/perf_iter.py --arch qwen3-4b \
+      --shape train_4k --opt seq_parallel [--multi-pod]
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import SHAPES, get_config                       # noqa: E402
+from repro.launch.mesh import make_production_mesh                 # noqa: E402
+from repro.launch.steps import make_step                           # noqa: E402
+from repro.parallel.hlo_analysis import (collective_stats,         # noqa: E402
+                                         roofline_from_compiled)
+
+
+def apply_opts(cfg, opts: list[str]):
+    for o in opts:
+        if o == "seq_parallel":
+            cfg = dataclasses.replace(cfg, seq_parallel=True)
+        elif o == "bf16_weights":
+            cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        elif o == "no_remat":
+            cfg = dataclasses.replace(cfg, remat=False)
+        elif o == "dots_remat":
+            cfg = dataclasses.replace(cfg, remat_policy="dots")
+        elif o == "dots_nb_remat":
+            cfg = dataclasses.replace(cfg, remat_policy="dots_nb")
+        elif o == "chunked_attn":
+            cfg = dataclasses.replace(cfg, attn_chunk_threshold=1024)
+        elif o.startswith("microbatch"):
+            cfg = dataclasses.replace(cfg, microbatch=int(o[len("microbatch"):]))
+        elif o == "dup_kv":
+            cfg = dataclasses.replace(cfg, kv_cache_repeat=2)
+        elif o == "bf16_moments":
+            cfg = dataclasses.replace(cfg, moment_dtype="bfloat16")
+        elif o == "no_fsdp":
+            cfg = dataclasses.replace(cfg, fsdp=False)
+        elif o == "fsdp":
+            cfg = dataclasses.replace(cfg, fsdp=True)
+        elif o:
+            raise KeyError(o)
+    return cfg
+
+
+def measure(cfg, shape, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = make_step(cfg, mesh, shape)
+    compiled = bundle.lower().compile()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = roofline_from_compiled(compiled, mesh.size, hlo_text=hlo)
+    # depth extrapolation via unrolled 1/2-block probes
+    terms = []
+    for k in (1, 2):
+        vcfg = dataclasses.replace(
+            cfg, n_layers=cfg.pattern_len * k,
+            encoder_layers=min(cfg.encoder_layers, k), scan_unroll=True)
+        vc = make_step(vcfg, mesh, shape).lower().compile()
+        vca = vc.cost_analysis()
+        vca = vca[0] if isinstance(vca, (list, tuple)) else vca
+        vcoll = collective_stats(vc.as_text())
+        terms.append((float(vca.get("flops", 0.0)),
+                      float(vca.get("bytes accessed", 0.0)),
+                      vcoll.link_bytes))
+    (f1, b1, c1), (f2, b2, c2) = terms
+    nb = cfg.n_blocks
+    roof.flops = f1 + (nb - 1) * max(f2 - f1, 0.0)
+    roof.hbm_bytes = b1 + (nb - 1) * max(b2 - b1, 0.0)
+    roof.link_bytes = c1 + (nb - 1) * max(c2 - c1, 0.0)
+    return {
+        "roofline": roof.as_dict(),
+        "step_s": roof.step_s,
+        "args_gib": (getattr(mem, "argument_size_in_bytes", 0) or 0) / 2**30,
+        "temp_gib": (getattr(mem, "temp_size_in_bytes", 0) or 0) / 2**30,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--opt", default="", help="comma-separated levers")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    shape = SHAPES[args.shape]
+    base_cfg = get_config(args.arch)
+    opts = [o for o in args.opt.split(",") if o]
+    cfg = apply_opts(base_cfg, opts)
+
+    res = measure(cfg, shape, args.multi_pod)
+    rf = res["roofline"]
+    print(f"cell: {args.arch} x {args.shape} x "
+          f"{'pod2x16x16' if args.multi_pod else 'pod16x16'}  opts={opts}")
+    print(f"  compute_s    = {rf['compute_s']:.4f}")
+    print(f"  memory_s     = {rf['memory_s']:.4f}")
+    print(f"  collective_s = {rf['collective_s']:.4f}")
+    print(f"  bound        = {rf['bound']}   step_s = {res['step_s']:.4f}")
+    print(f"  args/chip    = {res['args_gib']:.2f} GiB   "
+          f"temp/chip = {res['temp_gib']:.2f} GiB")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"arch": args.arch, "shape": args.shape,
+                       "opts": opts, **res}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: DORA (Dataflow-Instruction Orchestration Architecture)
+reproduced as a production-grade JAX/Pallas framework.
+
+Subpackages:
+  core       — the paper: ISA, two-stage DSE, MILP/GA schedulers,
+               codegen, machine simulator, functional runtime
+  kernels    — Pallas TPU kernels (flex_gemm, SFU, flash attn, SSD)
+  models     — config-driven model zoo (dense/MoE/SSM/hybrid/enc-dec/VLM)
+  configs    — the 10 assigned architectures + the paper's workloads
+  parallel   — logical-axis sharding (DP/FSDP/TP/EP), HLO roofline
+  data/optim/checkpoint — training substrate
+  launch     — mesh, dry-run, fault-tolerant trainer, batch server
+"""

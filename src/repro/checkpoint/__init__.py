@@ -1,0 +1,1 @@
+from .ckpt import AsyncSaver, latest_step, restore, save

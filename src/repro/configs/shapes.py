@@ -1,0 +1,82 @@
+"""Assigned input-shape set and per-cell applicability.
+
+  train_4k     seq 4096,   global_batch 256   (training)
+  prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+  decode_32k   seq 32768,  global_batch 128   (decode: 1 new token,
+                                               KV cache of seq_len)
+  long_500k    seq 524288, global_batch 1     (long-context decode)
+
+``long_500k`` requires sub-quadratic sequence mixing: it runs only for
+the SSM/hybrid families (mamba2-2.7b, jamba-1.5-large-398b) and is
+skipped — with the reason recorded — for the 8 pure full-attention
+archs (see DESIGN.md §4). No encoder-only archs are assigned, so all
+archs run the decode shapes (whisper decodes with its decoder).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.attention_free_or_hybrid:
+        return False, ("skip: pure full-attention arch — 512k decode "
+                       "needs sub-quadratic sequence mixing")
+    return True, ""
+
+
+def _enc_len(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    # audio stub: encoder frames scale with the assigned seq_len
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                compute_dtype=None) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no allocation). Caches/params are
+    built by the launch layer via eval_shape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = compute_dtype or jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encdec:
+        if shape.kind == "train":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cd),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cd),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

@@ -1,0 +1,21 @@
+"""DORA core: ISA, two-stage DSE compiler, schedulers, codegen,
+simulator and functional runtime (the paper's primary contribution)."""
+
+from .arch_gen import ArchTemplate, generate_platform, search_template
+from .codegen import CodegenResult, MemoryMap, generate
+from .compiler import CompileOptions, CompileResult, DoraCompiler
+from .ga import GAConfig, GAResult, GAScheduler
+from .graph import Layer, LayerKind, NonLinear, WorkloadGraph, mlp_graph, random_dag
+from .isa import (Epilogue, Instruction, LMUBody, LmuRole, MIUBody, MMUBody,
+                  OpType, Program, SFUBody, UnitKind, disassemble, mk)
+from .milp import MilpScheduler, SolveResult
+from .partition import PartitionedResult, partitioned_solve, split_segments
+from .perf_model import (CandidateMode, DoraPlatform, Policy, TilePlan,
+                         TpuGemmTiles, build_candidate_table,
+                         enumerate_layer_candidates, layer_latency,
+                         plan_tpu_gemm_tiles, single_pe_efficiency)
+from .runtime import DoraRuntime
+from .schedule import Schedule, ScheduleEntry, list_schedule, sequential_schedule
+from .simulator import SimReport, simulate
+
+__all__ = [n for n in dir() if not n.startswith("_")]

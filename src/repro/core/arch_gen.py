@@ -1,0 +1,77 @@
+"""Template-based DORA architecture generation (paper §3.7, §6 intro).
+
+Users specify unit counts (and optional HLS-style custom SFU functions);
+``generate_platform`` instantiates the DoraPlatform; ``search_template``
+reproduces the paper's hyperparameter search that settled on
+6 MMUs / 14 LMUs / 3 SFUs for the evaluated model set.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .graph import WorkloadGraph
+from .perf_model import DoraPlatform, Policy, build_candidate_table
+from .schedule import list_schedule
+
+
+@dataclass(frozen=True)
+class ArchTemplate:
+    n_mmu: int = 6
+    n_lmu: int = 14
+    n_sfu: int = 3
+    pe_grid: tuple[int, int, int] = (4, 4, 4)
+    # user-defined non-linear functions (HLS C/C++ in the paper; here any
+    # row-wise numpy callable registered under a name)
+    custom_sfu: dict[str, Callable[[np.ndarray], np.ndarray]] = field(
+        default_factory=dict, hash=False, compare=False)
+
+    def resource_cost(self) -> float:
+        """Abstract PL+AIE area proxy (for budget-constrained search)."""
+        return (self.n_mmu * 64          # AIE tiles
+                + self.n_lmu * 8         # URAM-heavy
+                + self.n_sfu * 12)       # DSP/LUT-heavy
+
+
+def generate_platform(template: ArchTemplate,
+                      base: DoraPlatform | None = None) -> DoraPlatform:
+    base = base or DoraPlatform.vck190()
+    return replace(base, n_mmu=template.n_mmu, n_lmu=template.n_lmu,
+                   n_sfu=template.n_sfu, pe_grid=template.pe_grid)
+
+
+def evaluate_template(template: ArchTemplate,
+                      graphs: Sequence[WorkloadGraph],
+                      policy: Policy | None = None) -> float:
+    """Mean makespan over a model set under a fast list schedule — the
+    fitness used by the architecture search."""
+    policy = policy or Policy.dora()
+    platform = generate_platform(template)
+    total = 0.0
+    for g in graphs:
+        cands = build_candidate_table(g, platform, policy)
+        total += list_schedule(g, cands, platform).makespan
+    return total / max(len(graphs), 1)
+
+
+def search_template(graphs: Sequence[WorkloadGraph],
+                    mmu_options: Sequence[int] = (2, 4, 6, 8),
+                    lmu_options: Sequence[int] = (8, 14, 20),
+                    sfu_options: Sequence[int] = (1, 3),
+                    area_budget: float | None = 600.0,
+                    ) -> tuple[ArchTemplate, float]:
+    best: tuple[ArchTemplate, float] | None = None
+    for nm in mmu_options:
+        for nl in lmu_options:
+            for ns in sfu_options:
+                t = ArchTemplate(nm, nl, ns)
+                if area_budget is not None and t.resource_cost() > area_budget:
+                    continue
+                score = evaluate_template(t, graphs)
+                if best is None or score < best[1]:
+                    best = (t, score)
+    assert best is not None
+    return best

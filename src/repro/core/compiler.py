@@ -1,0 +1,130 @@
+"""DoraCompiler: the end-to-end compilation framework (paper Fig. 6).
+
+  model graph --[stage-1 DSE]--> candidate table
+              --[stage-2 DSE: MILP | GA | list | sequential]--> schedule
+              --[codegen]--> per-unit instruction streams (binary)
+
+plus the two execution backends: the functional runtime (numerics) and
+the event-driven simulator (timing).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .codegen import CodegenResult, generate
+from .ga import GAConfig, GAResult, GAScheduler
+from .graph import WorkloadGraph
+from .milp import MilpScheduler, SolveResult
+from .partition import partitioned_solve
+from .perf_model import (CandidateMode, DoraPlatform, Policy,
+                         build_candidate_table)
+from .runtime import DoraRuntime, MatmulFn
+from .schedule import Schedule, list_schedule, sequential_schedule
+from .simulator import SimReport, simulate
+
+
+@dataclass
+class CompileOptions:
+    engine: str = "milp"          # milp | ga | list | sequential
+    n_segments: int = 1           # DAG-partitioned DSE (paper §4.4)
+    time_budget_s: float = 10.0
+    ga: GAConfig = field(default_factory=GAConfig)
+
+
+@dataclass
+class CompileResult:
+    graph: WorkloadGraph
+    platform: DoraPlatform
+    policy: Policy
+    candidates: dict[int, list[CandidateMode]]
+    schedule: Schedule
+    codegen: CodegenResult
+    stage1_s: float
+    stage2_s: float
+    codegen_s: float
+    solver_trace: list[tuple[float, float]] = field(default_factory=list)
+    optimal: bool | None = None
+
+    @property
+    def makespan_s(self) -> float:
+        return self.schedule.makespan
+
+    @property
+    def throughput_gflops(self) -> float:
+        return self.graph.total_flops / self.makespan_s / 1e9
+
+    @property
+    def program_bytes(self) -> int:
+        return self.codegen.program.byte_size()
+
+
+class DoraCompiler:
+    def __init__(self, platform: DoraPlatform | None = None,
+                 policy: Policy | None = None):
+        self.platform = platform or DoraPlatform.vck190()
+        self.policy = policy or Policy.dora()
+
+    # ------------------------------------------------------------- stage 1+2
+    def compile(self, graph: WorkloadGraph,
+                options: CompileOptions | None = None) -> CompileResult:
+        options = options or CompileOptions()
+        graph.validate()
+
+        t0 = time.perf_counter()
+        candidates = build_candidate_table(graph, self.platform, self.policy)
+        t1 = time.perf_counter()
+
+        trace: list[tuple[float, float]] = []
+        optimal: bool | None = None
+        if self.policy.monolithic or options.engine == "sequential":
+            schedule = sequential_schedule(graph, candidates, self.platform)
+        elif options.engine == "list":
+            schedule = list_schedule(graph, candidates, self.platform)
+        elif options.engine in ("milp", "ga"):
+            if options.engine == "milp":
+                def make_engine():
+                    return MilpScheduler(self.platform,
+                                         time_budget_s=options.time_budget_s
+                                         / max(options.n_segments, 1))
+            else:
+                def make_engine():
+                    cfg = options.ga
+                    return GAScheduler(self.platform, cfg)
+            if options.n_segments > 1:
+                res = partitioned_solve(graph, candidates, self.platform,
+                                        options.n_segments, make_engine)
+                schedule, trace = res.schedule, res.trace
+            else:
+                engine = make_engine()
+                res = engine.solve(graph, candidates)
+                schedule = res.schedule
+                trace = list(res.trace)
+                if isinstance(res, SolveResult):
+                    optimal = res.optimal
+        else:
+            raise ValueError(f"unknown engine {options.engine!r}")
+        t2 = time.perf_counter()
+
+        schedule.validate(graph, self.platform)
+        cg = generate(graph, schedule, self.platform)
+        t3 = time.perf_counter()
+
+        return CompileResult(graph, self.platform, self.policy, candidates,
+                             schedule, cg, t1 - t0, t2 - t1, t3 - t2,
+                             trace, optimal)
+
+    # -------------------------------------------------------------- backends
+    def execute(self, result: CompileResult,
+                inputs: dict[str, np.ndarray] | None = None,
+                matmul_fn: MatmulFn | None = None) -> dict[str, np.ndarray]:
+        inputs = inputs if inputs is not None else result.graph.random_inputs()
+        rt = DoraRuntime(result.codegen.memmap, matmul_fn=matmul_fn)
+        rt.load_inputs(inputs)
+        return rt.execute(result.codegen.program)
+
+    def simulate(self, result: CompileResult) -> SimReport:
+        return simulate(result.codegen, self.platform)

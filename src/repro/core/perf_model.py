@@ -1,0 +1,500 @@
+"""Stage-1 DSE: analytical performance model + candidate execution tables
+(paper §4.2) and the baseline-accelerator policy models used by the
+benchmark harness (CHARM-a/b, RSN, DORA ablations — Figs. 1/10/11).
+
+The model follows the paper's derivation:
+
+  per-PE kernel cycles  ->  MMU launch latency (4x4x4 PE composition)
+  ->  latency_MMU (compute vs operand streaming)  ->  latency_LMU
+  (one on-chip data-reuse iteration, DRAM overlap via ping/pong)
+  ->  total = latency_LMU * iter_times,
+      iter_times = ceil(M/LMU_m) * ceil(K/LMU_k) * ceil(N/LMU_n)
+
+Two policy axes reproduce the paper's comparisons:
+  flexible_parallelism (FP): dynamic loop bounds -> remainder tiles cost
+      their true cycles; OFF -> every tile pads to the fixed PE tile.
+  flexible_memory (FM): per-operand LMU roles/composition -> buffers
+      sized to the operand; OFF -> operands quantize to a fixed square
+      buffer granularity (padding inflates both storage and DRAM traffic).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import lru_cache
+
+from .graph import Layer, LayerKind, WorkloadGraph
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+# ---------------------------------------------------------------------------
+# Platform
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DoraPlatform:
+    """The DORA machine template (paper §3.7 / §6: 6 MMUs of 4x4x4 AIE
+    tiles, 14 LMUs, 3 SFUs on VCK190)."""
+
+    name: str = "vck190"
+    freq_mmu_hz: float = 1.0e9        # AIE clock
+    freq_pl_hz: float = 150.0e6      # PL clock (SFU/MIU/LMU control)
+    n_mmu: int = 6
+    n_lmu: int = 14
+    n_sfu: int = 3
+    pe_grid: tuple[int, int, int] = (4, 4, 4)   # PEs per MMU (m,k,n)
+    macs_per_cycle_pe: int = 8        # fp32 vector MACs / cycle / AIE tile
+    pe_mem_bytes: int = 24 * 1024     # usable AIE tile data memory
+    lmu_bytes: int = 32 * 36 * 1024   # 32 URAM blocks per LMU
+    dram_bw_bytes: float = 25.6e9     # LPDDR4 aggregate
+    stream_bw_bytes: float = 2.4e9    # one PLIO stream port
+    mmu_ports: int = 8                # parallel ingest ports per MMU
+    sfu_elems_per_cycle: int = 8      # row-streaming NL throughput @ PL clk
+    pipeline_fill_cycles: int = 12
+    decode_overhead_cycles: int = 6   # dynamic-loop-bound decode (paper: ~1%)
+    sync_overhead_s: float = 2.0e-6   # per on-chip iteration handshake
+    startup_s: float = 10.0e-6        # per-layer instruction fetch/dispatch
+    dtype_bytes: int = 4              # fp32 prototype
+
+    @property
+    def pes_per_mmu(self) -> int:
+        m, k, n = self.pe_grid
+        return m * k * n
+
+    @property
+    def peak_macs_per_s(self) -> float:
+        return (self.n_mmu * self.pes_per_mmu * self.macs_per_cycle_pe
+                * self.freq_mmu_hz)
+
+    @classmethod
+    def vck190(cls) -> "DoraPlatform":
+        return cls()
+
+    @classmethod
+    def tpu_v5e(cls) -> "DoraPlatform":
+        """TPU v5e viewed through the DORA template: one MXU-equipped
+        core = 1 'MMU' (128x128 systolic treated as a 1x1x1 PE grid with
+        a wide vector), VMEM = 16 'LMUs' of 8 MiB."""
+        return cls(
+            name="tpu_v5e",
+            freq_mmu_hz=0.94e9,
+            freq_pl_hz=0.94e9,
+            n_mmu=1,
+            n_lmu=16,
+            n_sfu=1,
+            pe_grid=(1, 1, 1),
+            macs_per_cycle_pe=128 * 128 * 4 // 2,  # ~197 bf16 TFLOP/s at .94GHz / 2 flops
+            pe_mem_bytes=8 * 1024 * 1024,
+            lmu_bytes=8 * 1024 * 1024,
+            dram_bw_bytes=819.0e9,
+            stream_bw_bytes=819.0e9,
+            mmu_ports=1,
+            sfu_elems_per_cycle=8 * 128,
+            dtype_bytes=2,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Policies (DORA vs baselines)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Policy:
+    name: str = "dora"
+    flexible_parallelism: bool = True
+    flexible_memory: bool = True
+    fixed_pe_tile: tuple[int, int, int] = (32, 32, 32)
+    buffer_granularity: int = 512     # rows/cols quantum when FM off
+    # static accelerators cannot re-shape the MMU composition per layer:
+    fixed_mmu_grid: tuple[int, int] | None = None   # (MMU_m, MMU_n)
+    # static accelerators execute layers one-at-a-time on the whole array:
+    monolithic: bool = False
+
+    @classmethod
+    def dora(cls) -> "Policy":
+        return cls()
+
+    @classmethod
+    def dora_fp_only(cls) -> "Policy":
+        return cls(name="dora-fp", flexible_memory=False)
+
+    @classmethod
+    def dora_fm_only(cls) -> "Policy":
+        return cls(name="dora-fm", flexible_parallelism=False)
+
+    @classmethod
+    def charm_a(cls) -> "Policy":
+        # monolithic CHARM design: fixed 3x2 MMU composition, padding
+        return cls(name="charm-a", flexible_parallelism=False,
+                   flexible_memory=False, fixed_mmu_grid=(3, 2),
+                   monolithic=True)
+
+    @classmethod
+    def charm_b(cls) -> "Policy":
+        # CHARM two-accelerator split: handled by CharmBModel below;
+        # per-accelerator behaviour is still static.
+        return cls(name="charm-b", flexible_parallelism=False,
+                   flexible_memory=False, fixed_mmu_grid=(2, 2),
+                   monolithic=True)
+
+    @classmethod
+    def rsn(cls) -> "Policy":
+        # RSN: flexible on-chip routing (FM-ish) but parallelism/buffer
+        # granularity tailored to medium models (paper §1 point d/e).
+        return cls(name="rsn", flexible_parallelism=False,
+                   flexible_memory=True, buffer_granularity=1024,
+                   fixed_mmu_grid=(3, 2), monolithic=True)
+
+
+# ---------------------------------------------------------------------------
+# Candidate modes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TilePlan:
+    """Everything the code generator needs to emit instructions for one
+    layer executed under one candidate mode."""
+
+    aie_m: int
+    aie_k: int
+    aie_n: int
+    mmu_m: int            # MMU composition along M
+    mmu_n: int            # MMU composition along N
+    lmu_m: int            # on-chip tile (data-reuse) sizes
+    lmu_k: int
+    lmu_n: int
+    lhs_lmus: int         # LMUs holding each operand
+    rhs_lmus: int
+    out_lmus: int
+    nl_lmus: int = 0
+
+    @property
+    def launch_m(self) -> int:
+        return self.aie_m * 4 * self.mmu_m
+
+    @property
+    def launch_k(self) -> int:
+        return self.aie_k * 4
+
+    @property
+    def launch_n(self) -> int:
+        return self.aie_n * 4 * self.mmu_n
+
+
+@dataclass(frozen=True)
+class CandidateMode:
+    """One row of the candidate execution table (paper Fig. 8b)."""
+
+    layer_id: int
+    mode_id: int
+    n_lmu: int
+    n_mmu: int
+    n_sfu: int
+    latency_s: float
+    plan: TilePlan | None = None
+
+    def dominates(self, other: "CandidateMode") -> bool:
+        return (self.n_lmu <= other.n_lmu and self.n_mmu <= other.n_mmu
+                and self.n_sfu <= other.n_sfu
+                and self.latency_s <= other.latency_s
+                and (self.n_lmu, self.n_mmu, self.n_sfu, self.latency_s)
+                != (other.n_lmu, other.n_mmu, other.n_sfu, other.latency_s))
+
+
+# ---------------------------------------------------------------------------
+# Single-PE / single-MMU kernel model
+# ---------------------------------------------------------------------------
+
+def pe_mm_cycles(m: int, k: int, n: int, platform: DoraPlatform,
+                 policy: Policy) -> int:
+    """Cycles for one PE to compute an m x k x n tile.
+
+    Dynamic loop bounds (FP on): the VLIW kernel runs its loop nest with
+    the *actual* bounds; the vectorized innermost (n) dimension rounds up
+    to the vector width; a small decode overhead reads the bounds
+    (paper: ~1% degradation, Fig. 10 point b).
+
+    Static kernel (FP off): the loop bounds are compile-time fixed, so
+    the tile pads to ``fixed_pe_tile`` and always costs the full nest.
+    """
+    v = platform.macs_per_cycle_pe
+    if policy.flexible_parallelism:
+        body = m * k * ceil_div(n, v) if platform.pe_grid != (1, 1, 1) else \
+            ceil_div(m * k * n, v)
+        return body + platform.pipeline_fill_cycles + platform.decode_overhead_cycles
+    tm, tk, tn = policy.fixed_pe_tile
+    pm, pk, pn = round_up(max(m, 1), tm), round_up(max(k, 1), tk), round_up(max(n, 1), tn)
+    body = pm * pk * ceil_div(pn, v) if platform.pe_grid != (1, 1, 1) else \
+        ceil_div(pm * pk * pn, v)
+    return body + platform.pipeline_fill_cycles
+
+
+def mmu_launch_cycles(tm: int, tk: int, tn: int, platform: DoraPlatform,
+                      policy: Policy) -> int:
+    """One MMU (pe_grid composition) computing a (tm, tk, tn) tile."""
+    gm, gk, gn = platform.pe_grid
+    pm, pk, pn = ceil_div(tm, gm), ceil_div(tk, gk), ceil_div(tn, gn)
+    cyc = pe_mm_cycles(pm, pk, pn, platform, policy)
+    # cascade/reduction across the k dimension of the PE grid
+    cyc += (gk - 1) * ceil_div(pn, platform.macs_per_cycle_pe)
+    return cyc
+
+
+def single_pe_efficiency(m: int, k: int, n: int, platform: DoraPlatform,
+                         policy: Policy) -> float:
+    """Fig. 10 metric: useful MACs / (cycles * MACs-per-cycle)."""
+    cyc = pe_mm_cycles(m, k, n, platform, policy)
+    ideal = m * k * n / platform.macs_per_cycle_pe
+    return ideal / cyc
+
+
+# ---------------------------------------------------------------------------
+# Layer latency (paper §4.2)
+# ---------------------------------------------------------------------------
+
+def _operand_lmus(rows: int, cols: int, platform: DoraPlatform,
+                  policy: Policy) -> tuple[int, int]:
+    """(#LMUs, effective stored bytes incl. padding) for one operand tile,
+    double-buffered (ping/pong)."""
+    if policy.flexible_memory:
+        r, c = rows, cols
+    else:
+        g = policy.buffer_granularity
+        r, c = round_up(rows, g), round_up(cols, g)
+    bytes_needed = 2 * r * c * platform.dtype_bytes   # ping + pong
+    return max(1, ceil_div(bytes_needed, platform.lmu_bytes)), bytes_needed
+
+
+def layer_latency(layer: Layer, plan: TilePlan, platform: DoraPlatform,
+                  policy: Policy, n_sfu: int) -> float:
+    """Total latency of one layer under one tile plan (seconds)."""
+    if layer.kind is LayerKind.NL:
+        rows, cols = layer.M, layer.N
+        nl_t = rows * cols / (platform.sfu_elems_per_cycle * platform.freq_pl_hz)
+        dram_t = 2 * rows * cols * platform.dtype_bytes / platform.dram_bw_bytes
+        return max(nl_t, dram_t) + platform.startup_s
+
+    M, K, N = layer.M, layer.K, layer.N
+    if not policy.flexible_memory:
+        g = policy.buffer_granularity
+        M_eff, K_eff, N_eff = round_up(M, g), round_up(K, g), round_up(N, g)
+    else:
+        M_eff, K_eff, N_eff = M, K, N
+
+    lm, lk, ln = (min(plan.lmu_m, round_up(M_eff, plan.launch_m)),
+                  min(plan.lmu_k, round_up(K_eff, plan.launch_k)),
+                  min(plan.lmu_n, round_up(N_eff, plan.launch_n)))
+    launches = (ceil_div(lm, plan.launch_m) * ceil_div(lk, plan.launch_k)
+                * ceil_div(ln, plan.launch_n))
+    # remainder launches run with true bounds when FP is on
+    lc = mmu_launch_cycles(min(plan.launch_m, M_eff), plan.launch_k,
+                           min(plan.launch_n, N_eff), platform, policy)
+    compute_t = launches * lc / platform.freq_mmu_hz
+
+    # operand streaming LMU->MMU per on-chip iteration (port-parallel)
+    stream_bytes = (lm * lk + lk * ln) * platform.dtype_bytes
+    stream_t = stream_bytes / (platform.stream_bw_bytes * platform.mmu_ports)
+
+    # DRAM traffic per on-chip iteration (ping/pong overlaps with compute)
+    dram_bytes = (lm * lk + lk * ln) * platform.dtype_bytes
+    k_iters = ceil_div(K_eff, lk)
+    # OUT written once per (m,n) iteration (after the k loop)
+    out_bytes = lm * ln * platform.dtype_bytes / k_iters
+    dram_t = (dram_bytes + out_bytes) / platform.dram_bw_bytes
+
+    iter_t = max(compute_t, stream_t, dram_t) + platform.sync_overhead_s
+    iters = ceil_div(M_eff, lm) * k_iters * ceil_div(N_eff, ln)
+
+    total = iters * iter_t + platform.startup_s
+
+    # fused non-linearity: row-streaming overlaps at tile granularity; an
+    # SFU adds only the drain of the last tile, unless no SFU is granted,
+    # in which case the NL runs as a separate streamed pass.
+    if layer.nonlinear is not None:
+        nl_t = M * N / (platform.sfu_elems_per_cycle * platform.freq_pl_hz)
+        if n_sfu >= 1:
+            total = max(total, nl_t) + nl_t / max(iters, 1)
+        else:
+            total += nl_t + 2 * M * N * platform.dtype_bytes / platform.dram_bw_bytes
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Stage-1 enumeration: candidate execution table
+# ---------------------------------------------------------------------------
+
+_AIE_TILE_MENU = (8, 16, 32, 64)
+
+
+def _pe_tile_options(platform: DoraPlatform, policy: Policy):
+    if not policy.flexible_parallelism:
+        yield policy.fixed_pe_tile
+        return
+    for am in _AIE_TILE_MENU:
+        for ak in _AIE_TILE_MENU:
+            for an in _AIE_TILE_MENU:
+                need = (am * ak + ak * an + am * an) * platform.dtype_bytes
+                if need <= platform.pe_mem_bytes:
+                    yield (am, ak, an)
+
+
+def _mmu_grid_options(n_mmu: int, policy: Policy):
+    if policy.fixed_mmu_grid is not None:
+        gm, gn = policy.fixed_mmu_grid
+        if gm * gn <= n_mmu:
+            yield (gm, gn)
+        else:
+            yield (1, 1)
+        return
+    for gm in range(1, n_mmu + 1):
+        for gn in range(1, n_mmu // gm + 1):
+            yield (gm, gn)
+
+
+def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
+                               policy: Policy,
+                               max_modes: int = 12) -> list[CandidateMode]:
+    """Build the candidate table rows for one layer: Pareto-optimal
+    (resources -> latency) execution modes (paper Fig. 8b)."""
+    if layer.kind is LayerKind.NL:
+        lmus, _ = _operand_lmus(layer.M, layer.N, platform, policy)
+        lat = layer_latency(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
+                                            layer.N, 1, 0, 1), platform,
+                            policy, n_sfu=1)
+        return [CandidateMode(layer.id, 0, min(lmus, platform.n_lmu), 0, 1,
+                              lat, None)]
+
+    M, K, N = layer.M, layer.K, layer.N
+    needs_sfu = layer.nonlinear is not None
+    cands: list[CandidateMode] = []
+    for (gm, gn) in _mmu_grid_options(platform.n_mmu, policy):
+        n_mmu_used = gm * gn
+        if policy.monolithic and n_mmu_used < min(
+                platform.n_mmu, (policy.fixed_mmu_grid or (1, 1))[0]
+                * (policy.fixed_mmu_grid or (1, 1))[1]):
+            continue
+        best_for_grid: CandidateMode | None = None
+        for (am, ak, an) in _pe_tile_options(platform, policy):
+            plan_launch_m = am * 4 * gm
+            plan_launch_k = ak * 4
+            plan_launch_n = an * 4 * gn
+            # on-chip reuse factors: grow the LMU tile while it fits
+            for rm in (1, 2, 4, 8):
+                for rn in (1, 2, 4, 8):
+                    for rk in (1, 2, 4):
+                        lm = min(plan_launch_m * rm, round_up(M, plan_launch_m))
+                        lk = min(plan_launch_k * rk, round_up(K, plan_launch_k))
+                        ln = min(plan_launch_n * rn, round_up(N, plan_launch_n))
+                        l_lhs, _ = _operand_lmus(lm, lk, platform, policy)
+                        l_rhs, _ = _operand_lmus(lk, ln, platform, policy)
+                        l_out, _ = _operand_lmus(lm, ln, platform, policy)
+                        l_nl = 1 if needs_sfu else 0
+                        n_lmu_used = l_lhs + l_rhs + l_out + l_nl
+                        if n_lmu_used > platform.n_lmu:
+                            continue
+                        plan = TilePlan(am, ak, an, gm, gn, lm, lk, ln,
+                                        l_lhs, l_rhs, l_out, l_nl)
+                        lat = layer_latency(layer, plan, platform, policy,
+                                            n_sfu=1 if needs_sfu else 0)
+                        cand = CandidateMode(layer.id, -1, n_lmu_used,
+                                             n_mmu_used,
+                                             1 if needs_sfu else 0, lat, plan)
+                        if (best_for_grid is None
+                                or cand.latency_s < best_for_grid.latency_s
+                                or (cand.latency_s == best_for_grid.latency_s
+                                    and cand.n_lmu < best_for_grid.n_lmu)):
+                            best_for_grid = cand
+        if best_for_grid is not None:
+            cands.append(best_for_grid)
+
+    # Pareto prune + cap
+    pareto: list[CandidateMode] = []
+    for c in sorted(cands, key=lambda c: (c.latency_s, c.n_mmu, c.n_lmu)):
+        if not any(p.dominates(c) for p in pareto):
+            pareto.append(c)
+    pareto = pareto[:max_modes]
+    return [replace(c, mode_id=i) for i, c in enumerate(pareto)]
+
+
+def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
+                          policy: Policy) -> dict[int, list[CandidateMode]]:
+    """Stage-1 output: layer id -> candidate modes (paper Fig. 6/8)."""
+    table: dict[int, list[CandidateMode]] = {}
+    cache: dict[tuple, list[CandidateMode]] = {}
+    for layer in graph.topo_order():
+        key = (layer.kind, layer.M, layer.K, layer.N, layer.nonlinear)
+        if key in cache:
+            table[layer.id] = [replace(c, layer_id=layer.id)
+                               for c in cache[key]]
+            continue
+        cands = enumerate_layer_candidates(layer, platform, policy)
+        if not cands:
+            raise ValueError(f"no feasible candidate for layer {layer.name} "
+                             f"({layer.M}x{layer.K}x{layer.N}) on {platform.name}")
+        cache[key] = cands
+        table[layer.id] = cands
+    return table
+
+
+# ---------------------------------------------------------------------------
+# TPU Pallas tile planner (stage-1 DSE reused as the kernel autotuner)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TpuGemmTiles:
+    block_m: int
+    block_k: int
+    block_n: int
+    est_hbm_bytes: float
+    est_flops: float
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.est_flops / max(self.est_hbm_bytes, 1.0)
+
+
+@lru_cache(maxsize=4096)
+def plan_tpu_gemm_tiles(M: int, K: int, N: int, dtype_bytes: int = 2,
+                        vmem_budget: int = 96 * 1024 * 1024,
+                        lane: int = 128, sublane: int = 8) -> TpuGemmTiles:
+    """Choose MXU-aligned VMEM block shapes minimizing HBM traffic — the
+    TPU instantiation of DORA's flexible memory management. Every block
+    dim is a multiple of (sublane, lane) but *clamped to the operand*
+    (dynamic bounds: remainders are masked in-kernel, never padded in
+    HBM)."""
+    def clamp_align(x: int, a: int) -> int:
+        return min(round_up(x, a), round_up(x, a))
+
+    best: TpuGemmTiles | None = None
+    m_opts = sorted({min(round_up(M, sublane), v) for v in
+                     (128, 256, 512, 1024, 2048)})
+    n_opts = sorted({min(round_up(N, lane), v) for v in
+                     (128, 256, 512, 1024, 2048)})
+    k_opts = sorted({min(round_up(K, lane), v) for v in
+                     (128, 256, 512, 1024, 2048, 4096)})
+    for bm in m_opts:
+        for bn in n_opts:
+            for bk in k_opts:
+                # double-buffered working set
+                ws = 2 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4
+                if ws > vmem_budget:
+                    continue
+                traffic = (ceil_div(N, bn) * M * K
+                           + ceil_div(M, bm) * K * N
+                           + M * N) * dtype_bytes
+                cand = TpuGemmTiles(bm, bk, bn, float(traffic),
+                                    2.0 * M * K * N)
+                if best is None or cand.est_hbm_bytes < best.est_hbm_bytes \
+                        or (cand.est_hbm_bytes == best.est_hbm_bytes
+                            and (bm * bn) > (best.block_m * best.block_n)):
+                    best = cand
+    assert best is not None, (M, K, N)
+    return best

@@ -1,0 +1,116 @@
+"""Functional DORA runtime: a sequential interpreter of the *binary*
+instruction stream (paper §5.2 control/data flow, numerics only).
+
+The flat program order is the IDU fetch order; codegen guarantees every
+consumer instruction appears after its producers, so sequential
+interpretation is functionally exact. Timing is the simulator's job —
+this module answers "does the compiled instruction stream compute the
+same numbers as the model?" (tested against WorkloadGraph.reference_execute
+and against the Pallas kernels when used as the MMU backend).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .codegen import MemoryMap
+from .graph import NonLinear
+from .isa import Epilogue, OpType, Program
+
+MatmulFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
+
+_SFU_FN = {
+    OpType.SFU_SOFTMAX: NonLinear.SOFTMAX,
+    OpType.SFU_GELU: NonLinear.GELU,
+    OpType.SFU_LAYERNORM: NonLinear.LAYERNORM,
+    OpType.SFU_RELU: NonLinear.RELU,
+    OpType.SFU_RELU2: NonLinear.RELU2,
+    OpType.SFU_SILU: NonLinear.SILU,
+}
+
+
+def _apply_epilogue(x: np.ndarray, epi: Epilogue) -> np.ndarray:
+    if epi == Epilogue.NONE or epi == Epilogue.BIAS:
+        return x
+    return {Epilogue.GELU: NonLinear.GELU,
+            Epilogue.RELU: NonLinear.RELU,
+            Epilogue.RELU2: NonLinear.RELU2,
+            Epilogue.SILU: NonLinear.SILU}[epi].apply(x)
+
+
+@dataclass
+class DoraRuntime:
+    memmap: MemoryMap
+    matmul_fn: MatmulFn | None = None   # default: numpy fp32
+    dram: dict[int, np.ndarray] = field(default_factory=dict)
+    groups: dict[int, np.ndarray] = field(default_factory=dict)
+    instr_executed: int = 0
+
+    def load_inputs(self, tensors: dict[str, np.ndarray]) -> None:
+        for name, arr in tensors.items():
+            addr, r, c = *self.memmap.by_name[name][:1], *self.memmap.by_name[name][1:]
+            addr, (er, ec) = self.memmap.by_name[name][0], self.memmap.by_name[name][1:]
+            if arr.shape != (er, ec):
+                raise ValueError(f"{name}: expected {(er, ec)}, got {arr.shape}")
+            self.dram[addr] = np.asarray(arr, dtype=np.float32).copy()
+
+    def _tensor(self, addr: int) -> np.ndarray:
+        if addr not in self.dram:
+            name, r, c = self.memmap.by_addr[addr]
+            self.dram[addr] = np.zeros((r, c), dtype=np.float32)
+        return self.dram[addr]
+
+    def _matmul(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        if self.matmul_fn is not None:
+            return np.asarray(self.matmul_fn(a, b), dtype=np.float32)
+        return a.astype(np.float32) @ b.astype(np.float32)
+
+    def execute(self, program: Program | bytes) -> dict[str, np.ndarray]:
+        if isinstance(program, (bytes, bytearray)):
+            program = Program.decode(bytes(program))
+        for instr in program.instructions:
+            op = instr.op_type
+            b = instr.body
+            if op == OpType.LMU_CFG or op == OpType.LMU_MOVE:
+                pass  # routing only; dataflow is positional in the binary
+            elif op == OpType.MIU_LOAD:
+                t = self._tensor(b.ddr_addr)
+                self.groups[b.des_lmu] = \
+                    t[b.start_row:b.end_row, b.start_col:b.end_col].copy()
+            elif op == OpType.MIU_STORE:
+                t = self._tensor(b.ddr_addr)
+                tile = self.groups[b.src_lmu]
+                t[b.start_row:b.end_row, b.start_col:b.end_col] = tile
+            elif op == OpType.MMU_GEMM:
+                if b.ping_op != 1:
+                    continue  # worker MMU: timing-only mirror of the lead
+                lhs = self.groups[b.src_lmu]
+                rhs = self.groups[b.src_lmu_rhs]
+                if lhs.shape != (b.bound_i, b.bound_k) or \
+                        rhs.shape != (b.bound_k, b.bound_j):
+                    raise ValueError(
+                        f"MMU bounds {b.bound_i}x{b.bound_k}x{b.bound_j} "
+                        f"!= tiles {lhs.shape} @ {rhs.shape}")
+                out = self._matmul(lhs, rhs)
+                if b.accumulate:
+                    out = self.groups[b.des_lmu] + out
+                out = _apply_epilogue(out, Epilogue(b.epilogue))
+                self.groups[b.des_lmu] = out
+            elif op in _SFU_FN:
+                x = self.groups[b.src_lmu]
+                if x.shape != (b.count, b.ele_num):
+                    raise ValueError(f"SFU shape {x.shape} != "
+                                     f"({b.count},{b.ele_num})")
+                self.groups[b.des_lmu] = _SFU_FN[op].apply(x)
+            elif op == OpType.IDU_HALT:
+                break
+            else:
+                raise NotImplementedError(op)
+            self.instr_executed += 1
+
+        return {name: self.dram[addr]
+                for name, (addr, _, _) in self.memmap.by_name.items()
+                if addr in self.dram}

@@ -1,0 +1,180 @@
+"""Schedule IR + the dependency-aware serial schedule-generation scheme
+(SGS) shared by the GA decoder, the MILP warm start, and the baselines.
+
+A schedule assigns every layer one candidate mode, a start time, and a
+concrete set of functional units; validity means (paper Fig. 7):
+  - precedence: S_i >= E_j for every dep edge (j -> i)   [line 5]
+  - exclusivity: unit intervals never overlap            [lines 7-11]
+  - resources: |units| match the mode's requirement      [lines 12-14]
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .graph import WorkloadGraph
+from .perf_model import CandidateMode, DoraPlatform
+
+
+@dataclass(frozen=True)
+class ScheduleEntry:
+    layer_id: int
+    mode: CandidateMode
+    start: float
+    end: float
+    lmu_ids: tuple[int, ...]
+    mmu_ids: tuple[int, ...]
+    sfu_ids: tuple[int, ...]
+
+
+@dataclass
+class Schedule:
+    entries: list[ScheduleEntry] = field(default_factory=list)
+
+    @property
+    def makespan(self) -> float:
+        return max((e.end for e in self.entries), default=0.0)
+
+    def by_layer(self) -> dict[int, ScheduleEntry]:
+        return {e.layer_id: e for e in self.entries}
+
+    def validate(self, graph: WorkloadGraph, platform: DoraPlatform,
+                 eps: float = 1e-9) -> None:
+        by_layer = self.by_layer()
+        if set(by_layer) != {l.id for l in graph.layers}:
+            raise ValueError("schedule does not cover every layer exactly once")
+        for l in graph.layers:
+            e = by_layer[l.id]
+            if e.end < e.start - eps:
+                raise ValueError(f"layer {l.id}: end < start")
+            if abs((e.end - e.start) - e.mode.latency_s) > max(
+                    1e-6 * e.mode.latency_s, eps):
+                raise ValueError(f"layer {l.id}: duration != mode latency")
+            if (len(e.lmu_ids) != e.mode.n_lmu
+                    or len(e.mmu_ids) != e.mode.n_mmu
+                    or len(e.sfu_ids) != e.mode.n_sfu):
+                raise ValueError(f"layer {l.id}: unit counts != mode")
+            if (max(e.lmu_ids, default=-1) >= platform.n_lmu
+                    or max(e.mmu_ids, default=-1) >= platform.n_mmu
+                    or max(e.sfu_ids, default=-1) >= platform.n_sfu):
+                raise ValueError(f"layer {l.id}: unit id out of range")
+            for d in l.deps:
+                if e.start < by_layer[d].end - eps:
+                    raise ValueError(
+                        f"precedence violated: layer {l.id} starts {e.start} "
+                        f"before dep {d} ends {by_layer[d].end}")
+        # unit exclusivity
+        for kind, count in (("lmu", platform.n_lmu), ("mmu", platform.n_mmu),
+                            ("sfu", platform.n_sfu)):
+            for uid in range(count):
+                ivs = sorted((e.start, e.end, e.layer_id)
+                             for e in self.entries
+                             if uid in getattr(e, f"{kind}_ids"))
+                for (s1, e1, l1), (s2, e2, l2) in zip(ivs, ivs[1:]):
+                    if s2 < e1 - eps:
+                        raise ValueError(
+                            f"{kind}{uid} overlap: layers {l1} and {l2}")
+
+
+# ---------------------------------------------------------------------------
+# Serial SGS decoder
+# ---------------------------------------------------------------------------
+
+class _UnitPool:
+    """Tracks per-unit busy-until times; allocates earliest-free units."""
+
+    def __init__(self, n: int):
+        self.free_at = [0.0] * n
+
+    def earliest(self, count: int, not_before: float) -> tuple[float, list[int]]:
+        """Earliest time >= not_before at which ``count`` units are
+        simultaneously free, and which units."""
+        if count == 0:
+            return not_before, []
+        if count > len(self.free_at):
+            raise ValueError(f"requested {count} units, pool has {len(self.free_at)}")
+        order = sorted(range(len(self.free_at)), key=lambda i: self.free_at[i])
+        chosen = order[:count]
+        t = max(not_before, max(self.free_at[i] for i in chosen))
+        return t, chosen
+
+    def occupy(self, ids: list[int], until: float) -> None:
+        for i in ids:
+            self.free_at[i] = until
+
+
+def list_schedule(graph: WorkloadGraph,
+                  candidates: dict[int, list[CandidateMode]],
+                  platform: DoraPlatform,
+                  priorities: dict[int, float] | None = None,
+                  mode_choice: dict[int, int] | None = None) -> Schedule:
+    """Dependency-aware greedy scheduler (the GA's decoder and the
+    baseline heuristic): repeatedly pick the ready layer with the best
+    priority and place it at its earliest feasible time on earliest-free
+    units.
+
+    priorities: smaller = earlier (defaults to topological id).
+    mode_choice: layer -> candidate index (defaults to fastest mode that
+    fits the platform).
+    """
+    priorities = priorities or {}
+    mode_choice = mode_choice or {}
+    lmu = _UnitPool(platform.n_lmu)
+    mmu = _UnitPool(platform.n_mmu)
+    sfu = _UnitPool(platform.n_sfu)
+
+    finish: dict[int, float] = {}
+    entries: list[ScheduleEntry] = []
+    remaining = {l.id for l in graph.layers}
+    deps = {l.id: set(l.deps) for l in graph.layers}
+
+    while remaining:
+        ready = [lid for lid in remaining if deps[lid] <= finish.keys()]
+        if not ready:
+            raise RuntimeError("cycle in graph?")
+        ready.sort(key=lambda lid: (priorities.get(lid, float(lid)), lid))
+        lid = ready[0]
+        modes = candidates[lid]
+        mi = mode_choice.get(lid)
+        mode = modes[mi % len(modes)] if mi is not None else \
+            min(modes, key=lambda c: c.latency_s)
+        dep_done = max((finish[d] for d in deps[lid]), default=0.0)
+        # earliest time all unit classes have capacity
+        t = dep_done
+        for _ in range(64):   # fixed-point on unit availability
+            t1, lmu_ids = lmu.earliest(mode.n_lmu, t)
+            t2, mmu_ids = mmu.earliest(mode.n_mmu, t1)
+            t3, sfu_ids = sfu.earliest(mode.n_sfu, t2)
+            if t3 == t:
+                break
+            t = t3
+        end = t + mode.latency_s
+        lmu.occupy(lmu_ids, end)
+        mmu.occupy(mmu_ids, end)
+        sfu.occupy(sfu_ids, end)
+        finish[lid] = end
+        entries.append(ScheduleEntry(lid, mode, t, end,
+                                     tuple(lmu_ids), tuple(mmu_ids),
+                                     tuple(sfu_ids)))
+        remaining.remove(lid)
+
+    entries.sort(key=lambda e: (e.start, e.layer_id))
+    return Schedule(entries)
+
+
+def sequential_schedule(graph: WorkloadGraph,
+                        candidates: dict[int, list[CandidateMode]],
+                        platform: DoraPlatform) -> Schedule:
+    """Monolithic baseline behaviour (CHARM-a/RSN): layers run strictly
+    one after another on the whole array."""
+    t = 0.0
+    entries = []
+    for l in graph.topo_order():
+        mode = min(candidates[l.id], key=lambda c: c.latency_s)
+        end = t + mode.latency_s
+        entries.append(ScheduleEntry(
+            l.id, mode, t, end,
+            tuple(range(mode.n_lmu)), tuple(range(mode.n_mmu)),
+            tuple(range(mode.n_sfu))))
+        t = end
+    return Schedule(entries)

@@ -1,0 +1,142 @@
+"""Event-driven DORA machine simulator (paper §3 runtime behaviour,
+Fig. 5 / Fig. 8d).
+
+Models, at instruction granularity:
+  - the single MIU serializing DRAM traffic at ``dram_bw_bytes``;
+  - the Sync Unit's Ready List Table: MIU LOADs with a ``deps`` list
+    block until every dependency layer's final STORE has drained (§3.4);
+  - stream back-pressure: a consumer instruction cannot start before its
+    producers' data is on the network (§5.2 — MMU stalls on empty
+    streams), encoded as the dataflow edges in ``CodegenResult.meta``;
+  - unit occupancy: each functional unit processes its own instruction
+    stream strictly in order.
+
+Output: per-instruction (start, end) times, per-unit busy time, and the
+makespan — used to validate schedules and to drive Fig. 11 throughput.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .codegen import CodegenResult
+from .isa import OpType, UnitKind
+from .perf_model import DoraPlatform
+
+
+@dataclass
+class SimReport:
+    makespan_s: float
+    instr_start: list[float]
+    instr_end: list[float]
+    unit_busy_s: dict[tuple[UnitKind, int], float]
+    layer_ready_s: dict[int, float] = field(default_factory=dict)
+
+    def utilization(self, unit: tuple[UnitKind, int]) -> float:
+        if self.makespan_s <= 0:
+            return 0.0
+        return self.unit_busy_s.get(unit, 0.0) / self.makespan_s
+
+
+def _duration(i: int, result: CodegenResult,
+              platform: DoraPlatform) -> float:
+    instr = result.program.instructions[i]
+    meta = result.meta[i]
+    op = instr.op_type
+    if op in (OpType.MIU_LOAD, OpType.MIU_STORE):
+        return meta.bytes_moved / platform.dram_bw_bytes
+    if op == OpType.LMU_MOVE:
+        return meta.bytes_moved / (platform.stream_bw_bytes
+                                   * platform.mmu_ports)
+    if op == OpType.LMU_CFG:
+        return 4.0 / platform.freq_pl_hz
+    if op == OpType.MMU_GEMM:
+        return (meta.mmu_cycles / platform.freq_mmu_hz
+                + platform.sync_overhead_s)
+    if op in (OpType.SFU_SOFTMAX, OpType.SFU_GELU, OpType.SFU_LAYERNORM,
+              OpType.SFU_RELU, OpType.SFU_RELU2, OpType.SFU_SILU):
+        body = instr.body
+        elems = body.count * body.ele_num
+        return elems / (platform.sfu_elems_per_cycle * platform.freq_pl_hz)
+    return 0.0
+
+
+def simulate(result: CodegenResult, platform: DoraPlatform) -> SimReport:
+    prog = result.program
+    n = len(prog)
+    start = [-1.0] * n
+    end = [-1.0] * n
+    unit_free: dict[tuple[UnitKind, int], float] = {}
+    unit_busy: dict[tuple[UnitKind, int], float] = {}
+    layer_ready: dict[int, float] = {}
+
+    # per-unit queues in program (IDU-dispatch) order
+    queues: dict[tuple[UnitKind, int], list[int]] = {}
+    for i, instr in enumerate(prog.instructions):
+        queues.setdefault((instr.unit_kind, instr.unit_index), []).append(i)
+    heads = {k: 0 for k in queues}
+
+    # per-layer instruction fetch/dispatch cost (IDU startup, §3.6):
+    # charged on the first instruction of each layer.
+    startup_of: dict[int, int] = {}
+    for i, m in enumerate(result.meta):
+        if m.layer_id >= 0 and m.layer_id not in startup_of:
+            startup_of[m.layer_id] = i
+    startup_idx = set(startup_of.values())
+
+    done = 0
+    stalled_rounds = 0
+    while done < n:
+        progressed = False
+        for key, q in queues.items():
+            while heads[key] < len(q):
+                i = q[heads[key]]
+                meta = result.meta[i]
+                instr = prog.instructions[i]
+                # dataflow producers must have finished
+                dep_times = []
+                ok = True
+                for d in meta.deps:
+                    if end[d] < 0:
+                        ok = False
+                        break
+                    dep_times.append(end[d])
+                if not ok:
+                    break
+                # ready-list RAW sync for MIU LOAD deps
+                if instr.op_type == OpType.MIU_LOAD and instr.body.deps:
+                    for lid in instr.body.deps:
+                        rs = result.ready_store.get(lid)
+                        if rs is not None:
+                            if end[rs] < 0:
+                                ok = False
+                                break
+                            dep_times.append(end[rs])
+                if not ok:
+                    break
+                t0 = max([unit_free.get(key, 0.0)] + dep_times)
+                dur = _duration(i, result, platform)
+                if i in startup_idx:
+                    dur += platform.startup_s
+                start[i] = t0
+                end[i] = t0 + dur
+                unit_free[key] = end[i]
+                unit_busy[key] = unit_busy.get(key, 0.0) + dur
+                if instr.op_type == OpType.MIU_STORE:
+                    rs = result.ready_store.get(meta.layer_id)
+                    if rs == i:
+                        layer_ready[meta.layer_id] = end[i]
+                heads[key] += 1
+                done += 1
+                progressed = True
+        if not progressed:
+            stalled_rounds += 1
+            if stalled_rounds > 2:
+                missing = [i for i in range(n) if end[i] < 0]
+                raise RuntimeError(
+                    f"simulator deadlock: {len(missing)} instructions "
+                    f"blocked, first = {missing[:5]}")
+        else:
+            stalled_rounds = 0
+
+    return SimReport(max(end), start, end, unit_busy, layer_ready)

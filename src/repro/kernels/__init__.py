@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the DORA hot spots (+ jnp oracles in ref.py).
+
+flex_gemm        — dynamic-loop-bound GEMM (the paper's MMU, §3.3)
+sfu              — row-streaming softmax/layernorm/rmsnorm/gelu (§3.5)
+flash_attention  — GQA causal flash attention (serving path)
+ssd              — Mamba-2 chunked SSD scan (hybrid/SSM archs)
+
+All kernels are validated in interpret mode against ref.py across shape
+and dtype sweeps (tests/test_kernels_*.py).
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+from .flex_gemm import flex_gemm_pallas
+from .sfu import (gelu_rows_pallas, layernorm_rows_pallas,
+                  rmsnorm_rows_pallas, softmax_rows_pallas)
+from .ssd import ssd_pallas

@@ -1,0 +1,138 @@
+"""SFU kernels: row-streaming non-linear operators (paper §3.5).
+
+The paper's SFU reconstructs a full matrix row in a line buffer and
+applies the reduction row-wise. The TPU analogue: one VMEM block holds
+``block_rows`` full rows (cols padded to the 128-lane boundary and
+masked against the true width from the scalar-prefetch instruction
+word), the kernel reduces along the row and streams results back.
+
+Kernels: softmax, layernorm (optional affine), rmsnorm (optional gain),
+gelu. Grid is 1-D over row blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(a: int, b: int) -> int:
+    return -(-a // b) * b
+
+
+def _col_mask(block_rows: int, block_cols: int, n_ref):
+    ids = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_cols), 1)
+    return ids < n_ref[0]
+
+
+def _softmax_kernel(n_ref, x_ref, o_ref):
+    mask = _col_mask(*x_ref.shape, n_ref)
+    x = jnp.where(mask, x_ref[...].astype(jnp.float32), -jnp.inf)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(x - m), 0.0)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / s).astype(o_ref.dtype)
+
+
+def _layernorm_kernel(n_ref, x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    mask = _col_mask(*x_ref.shape, n_ref)
+    n = n_ref[0].astype(jnp.float32)
+    x = jnp.where(mask, x_ref[...].astype(jnp.float32), 0.0)
+    mu = jnp.sum(x, axis=-1, keepdims=True) / n
+    d = jnp.where(mask, x - mu, 0.0)
+    var = jnp.sum(d * d, axis=-1, keepdims=True) / n
+    y = d * jax.lax.rsqrt(var + eps)
+    if g_ref is not None:
+        y = y * g_ref[...].astype(jnp.float32)
+    if b_ref is not None:
+        y = y + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _rmsnorm_kernel(n_ref, x_ref, g_ref, o_ref, *, eps: float):
+    mask = _col_mask(*x_ref.shape, n_ref)
+    n = n_ref[0].astype(jnp.float32)
+    x = jnp.where(mask, x_ref[...].astype(jnp.float32), 0.0)
+    ms = jnp.sum(x * x, axis=-1, keepdims=True) / n
+    y = x * jax.lax.rsqrt(ms + eps)
+    if g_ref is not None:
+        y = y * g_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _gelu_kernel(n_ref, x_ref, o_ref):
+    o_ref[...] = jax.nn.gelu(x_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _rowwise_call(kernel, x, extra, *, block_rows: int, interpret: bool):
+    R, N = x.shape
+    bc = _round_up(N, 128)
+    br = min(block_rows, _round_up(R, 8))
+    grid = (pl.cdiv(R, br),)
+    nscalar = jnp.array([N], dtype=jnp.int32)
+    in_specs = [pl.BlockSpec((br, bc), lambda i, n: (i, 0))]
+    ops = [x]
+    for e in extra:
+        in_specs.append(pl.BlockSpec((1, bc), lambda i, n: (0, 0)))
+        ops.append(e.reshape(1, N))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((br, bc), lambda i, n: (i, 0))),
+        out_shape=jax.ShapeDtypeStruct((R, N), x.dtype),
+        interpret=interpret,
+    )(nscalar, *ops)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax_rows_pallas(x, *, block_rows: int = 256,
+                        interpret: bool = False):
+    return _rowwise_call(_softmax_kernel, x, (), block_rows=block_rows,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def layernorm_rows_pallas(x, gamma=None, beta=None, *, eps: float = 1e-5,
+                          block_rows: int = 256, interpret: bool = False):
+    extra = []
+    if gamma is not None:
+        extra.append(gamma)
+    if beta is not None:
+        extra.append(beta)
+
+    def kern(n_ref, x_ref, *rest):
+        o_ref = rest[-1]
+        g_ref = rest[0] if gamma is not None else None
+        b_ref = rest[1] if (gamma is not None and beta is not None) else (
+            rest[0] if (gamma is None and beta is not None) else None)
+        _layernorm_kernel(n_ref, x_ref, g_ref, b_ref, o_ref, eps=eps)
+
+    return _rowwise_call(kern, x, tuple(extra), block_rows=block_rows,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_rows_pallas(x, gamma=None, *, eps: float = 1e-6,
+                        block_rows: int = 256, interpret: bool = False):
+    extra = (gamma,) if gamma is not None else ()
+
+    def kern(n_ref, x_ref, *rest):
+        o_ref = rest[-1]
+        g_ref = rest[0] if gamma is not None else None
+        _rmsnorm_kernel(n_ref, x_ref, g_ref, o_ref, eps=eps)
+
+    return _rowwise_call(kern, x, extra, block_rows=block_rows,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gelu_rows_pallas(x, *, block_rows: int = 256, interpret: bool = False):
+    return _rowwise_call(_gelu_kernel, x, (), block_rows=block_rows,
+                         interpret=interpret)

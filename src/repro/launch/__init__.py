@@ -1,0 +1,2 @@
+from .mesh import make_local_mesh, make_production_mesh
+from .steps import StepBundle, make_decode_step, make_prefill_step, make_step, make_train_step

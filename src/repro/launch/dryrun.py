@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell, on the single-pod 16x16
+mesh AND the 2-pod (2,16,16) mesh:
+
+    jit(step, in_shardings=..., out_shardings=...) \
+        .lower(**input ShapeDtypeStructs).compile()
+
+must succeed; we record compiled.memory_analysis() (fits per chip),
+compiled.cost_analysis() (FLOPs/bytes for §Roofline) and the collective
+schedule parsed from the optimized HLO. Results land in
+experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+The XLA_FLAGS line above MUST run before any jax import (jax locks the
+device count at first init) — that is why it is the first statement of
+this module. Run as:
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out DIR]
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh                  # noqa: E402
+from repro.launch.steps import make_step                            # noqa: E402
+from repro.parallel.hlo_analysis import (collective_stats,          # noqa: E402
+                                         roofline_from_compiled)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "kind": shape.kind}
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        record |= {"status": "skipped", "reason": reason}
+        _write(out_dir, record)
+        if verbose:
+            print(f"[skip] {arch} x {shape_name} x {mesh_name}: {reason}")
+        return record
+
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.size
+        bundle = make_step(cfg, mesh, shape)
+        lowered = bundle.lower()
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        roof = roofline_from_compiled(compiled, n_chips, hlo_text=hlo)
+
+        # -- depth extrapolation ----------------------------------------
+        # XLA cost_analysis counts a while-loop (scan-over-layers) body
+        # ONCE regardless of trip count, so FLOPs / bytes / collective
+        # bytes are re-derived from fully-UNROLLED 1-block and 2-block
+        # variants (unrolled scans lower to straight-line HLO, so the
+        # delta is exactly one block's cost):
+        #     f(nb) = f(1) + (nb - 1) * (f(2) - f(1)).
+        # memory_analysis comes from the FULL scan compile above (params,
+        # caches and residuals all scale with real depth there).
+        nb = cfg.n_blocks
+        terms = []
+        for k in (1, 2):
+            vcfg = dataclasses.replace(
+                cfg, n_layers=cfg.pattern_len * k,
+                encoder_layers=min(cfg.encoder_layers, k),
+                scan_unroll=True)
+            vb = make_step(vcfg, mesh, shape)
+            vcompiled = vb.lower().compile()
+            vca = vcompiled.cost_analysis()
+            if isinstance(vca, (list, tuple)):
+                vca = vca[0]
+            vhlo = vcompiled.as_text()
+            vcoll = collective_stats(vhlo)
+            terms.append((float(vca.get("flops", 0.0)),
+                          float(vca.get("bytes accessed", 0.0)),
+                          vcoll.link_bytes))
+        (f1, b1, c1), (f2, b2, c2) = terms
+        # deltas clamp at 0: tiny decode blocks can produce negative
+        # probe noise from outside-loop fusion differences
+        roof.flops = f1 + (nb - 1) * max(f2 - f1, 0.0)
+        roof.hbm_bytes = b1 + (nb - 1) * max(b2 - b1, 0.0)
+        roof.link_bytes = c1 + (nb - 1) * max(c2 - c1, 0.0)
+
+        record |= {
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "n_chips": n_chips,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            "cost": {"flops_raw_loop_counted_once": float(ca.get("flops", 0.0)),
+                     "bytes_raw_loop_counted_once": float(
+                         ca.get("bytes accessed", 0.0)),
+                     "depth_extrapolation": {
+                         "n_blocks": nb,
+                         "per_block_flops": f2 - f1,
+                         "per_block_bytes": b2 - b1,
+                         "per_block_link_bytes": c2 - c1}},
+            "collectives": {
+                "per_op_bytes": coll.per_op_bytes,
+                "per_op_count": coll.per_op_count,
+                "link_bytes_per_chip": coll.link_bytes,
+            },
+            "roofline": roof.as_dict(),
+            "params_total": cfg.param_count(),
+            "params_active": cfg.active_param_count(),
+        }
+        # MODEL_FLOPS: useful model flops for this step (6ND train /
+        # 2ND inference, N = active params), per chip.
+        n_act = cfg.active_param_count()
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind in ("train", "prefill")
+                  else shape.global_batch)
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * n_act * tokens / n_chips
+        record["model_flops_per_chip"] = model_flops
+        record["model_vs_hlo_flops"] = (
+            model_flops / roof.flops if roof.flops else None)
+        if verbose:
+            mb = (record["memory"]["argument_bytes"] or 0) / 2**30
+            print(f"[ok]   {arch} x {shape_name} x {mesh_name}: "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+                  f"args/chip {mb:.2f}GiB bound={roof.bound}")
+    except Exception as e:   # noqa: BLE001 — a failed cell is a bug report
+        record |= {"status": "failed", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: {e}")
+    _write(out_dir, record)
+    return record
+
+
+def _write(out_dir: str, record: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs the 512 placeholder devices; do not import jax "
+        "before this module")
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape, multi, args.out)
+                n_fail += rec["status"] == "failed"
+    print(f"dry-run complete; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

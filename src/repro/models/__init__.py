@@ -1,0 +1,2 @@
+from . import encdec, layers, lm, ssm
+from .config import ArchConfig, LayerPattern

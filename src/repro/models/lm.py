@@ -1,0 +1,324 @@
+"""Decoder-only language model over a repeating block pattern.
+
+Covers dense (internlm2/qwen3/qwen1.5/nemotron), MoE (llama4/dbrx),
+pure-SSM (mamba2), hybrid (jamba), and VLM-text (qwen2-vl, M-RoPE).
+Layers scan over homogeneous super-blocks with optional remat; all
+params carry logical-axis specs for repro.parallel.sharding.
+
+Public entry points:
+  init(cfg, key)                       -> (params, specs)
+  forward(cfg, params, tokens, ...)    -> (logits, aux_loss)
+  loss_fn(cfg, params, tokens, labels) -> scalar loss (+z-loss, +moe aux)
+  init_cache(cfg, batch, max_len)      -> decode cache pytree
+  prefill(cfg, params, tokens)         -> (logits, cache)
+  decode_step(cfg, params, cache, tok, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers as L
+from . import ssm as S
+from .config import ArchConfig
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------- init
+
+def _init_layer(cfg: ArchConfig, key, pat) -> tuple[Tree, Tree]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict = {}
+    s: dict = {}
+    p["norm1"], s["norm1"] = L.init_norm(cfg)
+    if pat.mixer == "attn":
+        p["attn"], s["attn"] = L.init_attention(cfg, k1)
+    else:
+        p["ssm"], s["ssm"] = S.init_ssm(cfg, k1)
+    if pat.ffn == "moe":
+        p["norm2"], s["norm2"] = L.init_norm(cfg)
+        p["moe"], s["moe"] = L.init_moe(cfg, k2)
+    elif pat.ffn == "dense":
+        p["norm2"], s["norm2"] = L.init_norm(cfg)
+        p["mlp"], s["mlp"] = L.init_mlp(cfg, k2)
+    # pat.ffn == "none": pure mixer layer (mamba2)
+    return p, s
+
+
+def _stack_specs(spec: Tree) -> Tree:
+    return jax.tree.map(lambda axes: ("layers",) + tuple(axes), spec,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init(cfg: ArchConfig, key) -> tuple[Tree, Tree]:
+    keys = jax.random.split(key, 4)
+    V, D = cfg.vocab_size, cfg.d_model
+    params: dict = {
+        "embed": jax.random.normal(keys[0], (V, D)) * 0.02,
+        "lm_head": jax.random.normal(keys[1], (D, V)) / math.sqrt(D),
+    }
+    specs: dict = {
+        "embed": ("vocab", "embed"),
+        "lm_head": ("embed", "vocab"),
+    }
+    params["final_norm"], specs["final_norm"] = L.init_norm(cfg)
+
+    blocks_p, blocks_s = {}, {}
+    for pi, pat in enumerate(cfg.pattern):
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], pi),
+                                 cfg.n_blocks)
+        holder: dict = {}
+
+        def one(kk, _pat=pat, _holder=holder):
+            p, s = _init_layer(cfg, kk, _pat)
+            _holder.clear()
+            _holder.update(s)   # specs are trace-invariant metadata
+            return p
+
+        blocks_p[f"pos{pi}"] = jax.vmap(one)(bkeys)
+        blocks_s[f"pos{pi}"] = _stack_specs(dict(holder))
+    params["blocks"] = blocks_p
+    specs["blocks"] = blocks_s
+
+    if cfg.param_dtype != "float32":
+        dt = jnp.dtype(cfg.param_dtype)
+        params = jax.tree.map(lambda x: x.astype(dt), params)
+    return params, specs
+
+
+def abstract_init(cfg: ArchConfig) -> tuple[Tree, Tree]:
+    """Shapes/specs without allocating (dry-run path)."""
+    holder: list = []
+
+    def f(key):
+        p, s = init(cfg, key)
+        holder.append(s)
+        return p
+
+    p_shape = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return p_shape, holder[0]
+
+
+# ------------------------------------------------------------------- blocks
+
+def _layer_fwd(cfg: ArchConfig, p, x, positions, pat):
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if pat.mixer == "attn":
+        mix, _ = L.attention_fwd(cfg, p["attn"], h, positions, causal=True)
+    else:
+        mix = S.ssm_fwd(cfg, p["ssm"], h)
+    x = x + mix
+    if pat.ffn == "none":
+        return x, 0.0
+    h = L.apply_norm(cfg, p["norm2"], x)
+    if pat.ffn == "moe":
+        ff, aux = L.moe_fwd(cfg, p["moe"], h)
+    else:
+        ff, aux = L.mlp_fwd(cfg, p["mlp"], h), 0.0
+    return x + ff, aux
+
+
+def _block_fwd(cfg: ArchConfig, block_params, x, positions):
+    aux_total = 0.0
+    for pi, pat in enumerate(cfg.pattern):
+        x, aux = _layer_fwd(cfg, block_params[f"pos{pi}"], x, positions, pat)
+        aux_total = aux_total + aux
+        if cfg.seq_parallel:
+            # token dim sharded over the model axis between layers:
+            # XLA lowers the surrounding TP all-reduces to
+            # reduce-scatter + all-gather (half the link bytes) and
+            # shards the norms/residuals
+            x = constrain(x, "batch", "seq_sp", "embed_act")
+    return x, aux_total
+
+
+def _positions_for(cfg: ArchConfig, tokens, offset: int = 0):
+    B, Sq = tokens.shape[0], tokens.shape[1]
+    pos = jnp.arange(Sq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, Sq))
+    if cfg.m_rope:
+        # text stream: all three position channels equal (vision stub
+        # would supply real (t, h, w) ids)
+        pos = jnp.broadcast_to(pos[None], (3, B, Sq))
+    return pos
+
+
+def forward(cfg: ArchConfig, params, tokens, positions=None
+            ) -> tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) int32 -> logits (B, S, V) in f32, aux loss."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = params["embed"].astype(cd)[tokens]
+    h = constrain(h, "batch", None, "embed_act")
+    if positions is None:
+        positions = _positions_for(cfg, tokens)
+
+    body = functools.partial(_block_fwd, cfg)
+    if cfg.remat:
+        policy = {
+            "dots": jax.checkpoint_policies.dots_saveable,
+            # save weight-matmul outputs only (no-batch-dim dots);
+            # attention scores and elementwise stay rematerialized
+            "dots_nb": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        }.get(cfg.remat_policy, jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    def scan_fn(carry, block_params):
+        x, aux = carry
+        x, aux_b = body(block_params, x, positions)
+        return (x, aux + aux_b), None
+
+    (h, aux), _ = jax.lax.scan(scan_fn, (h, jnp.float32(0.0)),
+                               params["blocks"],
+                               unroll=cfg.n_blocks if cfg.scan_unroll else 1)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params, tokens, labels,
+            z_loss: float = 1e-4) -> jax.Array:
+    logits, aux = forward(cfg, params, tokens)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll).mean()
+    zl = z_loss * jnp.square(lse).mean()
+    return nll + zl + aux
+
+
+# -------------------------------------------------------------------- decode
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> Tree:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    cache: dict = {}
+    for pi, pat in enumerate(cfg.pattern):
+        if pat.mixer == "attn":
+            shape = (cfg.n_blocks, batch,
+                     cfg.n_kv_heads * cfg.kv_cache_repeat, max_len,
+                     cfg.head_dim)
+            cache[f"pos{pi}"] = {"k": jnp.zeros(shape, dtype),
+                                 "v": jnp.zeros(shape, dtype)}
+        else:
+            conv_dim = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            cache[f"pos{pi}"] = {
+                "conv": jnp.zeros((cfg.n_blocks, batch,
+                                   cfg.ssm_conv_width - 1, conv_dim), dtype),
+                "state": jnp.zeros((cfg.n_blocks, batch, cfg.ssm_heads,
+                                    cfg.ssm_head_dim, cfg.ssm_state),
+                                   jnp.float32),
+            }
+    return cache
+
+
+def cache_specs(cfg: ArchConfig) -> Tree:
+    specs: dict = {}
+    for pi, pat in enumerate(cfg.pattern):
+        if pat.mixer == "attn":
+            ax = ("layers", "batch", "kv_heads", None, None)
+            specs[f"pos{pi}"] = {"k": ax, "v": ax}
+        else:
+            specs[f"pos{pi}"] = {
+                "conv": ("layers", "batch", None, "conv_dim"),
+                "state": ("layers", "batch", "ssm_heads", None, None),
+            }
+    return specs
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_len: int | None = None
+            ) -> tuple[jax.Array, Tree]:
+    """Run the prompt, return last-position logits + a filled cache of
+    size max_len (>= prompt length)."""
+    B, Sp = tokens.shape
+    max_len = max_len or Sp
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = params["embed"].astype(cd)[tokens]
+    h = constrain(h, "batch", None, "embed_act")
+    positions = _positions_for(cfg, tokens)
+    cache = init_cache(cfg, B, max_len)
+
+    def scan_fn(carry, xs):
+        x = carry
+        block_params, cache_slice = xs
+        new_slice = {}
+        for pi, pat in enumerate(cfg.pattern):
+            p = block_params[f"pos{pi}"]
+            hn = L.apply_norm(cfg, p["norm1"], x)
+            if pat.mixer == "attn":
+                mix, (k, v) = L.attention_fwd(cfg, p["attn"], hn, positions,
+                                              causal=True)
+                if cfg.kv_cache_repeat > 1:
+                    k = jnp.repeat(k, cfg.kv_cache_repeat, axis=1)
+                    v = jnp.repeat(v, cfg.kv_cache_repeat, axis=1)
+                ck = jax.lax.dynamic_update_slice(
+                    cache_slice[f"pos{pi}"]["k"], k.astype(cd), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache_slice[f"pos{pi}"]["v"], v.astype(cd), (0, 0, 0, 0))
+                new_slice[f"pos{pi}"] = {"k": ck, "v": cv}
+            else:
+                mix, state, conv = S.ssm_fwd_with_cache(cfg, p["ssm"], hn)
+                new_slice[f"pos{pi}"] = {"conv": conv.astype(cd),
+                                         "state": state}
+            x = x + mix
+            if pat.ffn != "none":
+                hn = L.apply_norm(cfg, p["norm2"], x)
+                if pat.ffn == "moe":
+                    ff, _ = L.moe_fwd(cfg, p["moe"], hn)
+                else:
+                    ff = L.mlp_fwd(cfg, p["mlp"], hn)
+                x = x + ff
+        return x, new_slice
+
+    h, new_cache = jax.lax.scan(scan_fn, h, (params["blocks"], cache),
+                                unroll=cfg.n_blocks if cfg.scan_unroll else 1)
+    h = L.apply_norm(cfg, params["final_norm"], h[:, -1:])
+    logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos
+                ) -> tuple[jax.Array, Tree]:
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (number
+    of tokens already in the cache). Returns (logits (B, V), cache)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = params["embed"].astype(cd)[tokens]
+
+    def scan_fn(carry, xs):
+        x = carry
+        block_params, cache_slice = xs
+        new_slice = {}
+        for pi, pat in enumerate(cfg.pattern):
+            p = block_params[f"pos{pi}"]
+            hn = L.apply_norm(cfg, p["norm1"], x)
+            if pat.mixer == "attn":
+                c = cache_slice[f"pos{pi}"]
+                mix, ck, cv = L.attention_decode(cfg, p["attn"], hn,
+                                                 c["k"], c["v"], pos)
+                new_slice[f"pos{pi}"] = {"k": ck, "v": cv}
+            else:
+                c = cache_slice[f"pos{pi}"]
+                mix, conv, state = S.ssm_decode(cfg, p["ssm"], hn,
+                                                c["conv"], c["state"])
+                new_slice[f"pos{pi}"] = {"conv": conv, "state": state}
+            x = x + mix
+            if pat.ffn != "none":
+                hn = L.apply_norm(cfg, p["norm2"], x)
+                if pat.ffn == "moe":
+                    ff, _ = L.moe_fwd(cfg, p["moe"], hn)
+                else:
+                    ff = L.mlp_fwd(cfg, p["mlp"], hn)
+                x = x + ff
+        return x, new_slice
+
+    h, new_cache = jax.lax.scan(scan_fn, h, (params["blocks"], cache),
+                                unroll=cfg.n_blocks if cfg.scan_unroll else 1)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    return logits[:, 0], new_cache

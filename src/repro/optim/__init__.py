@@ -1,0 +1,4 @@
+from .adamw import (OptConfig, apply_updates, clip_by_global_norm,
+                    init_state, lr_at, state_specs)
+from .compression import (compress, compressed_psum, decompress,
+                          ef_quantize, ef_tree_init, ef_tree_quantize)

@@ -1,0 +1,2 @@
+from .sharding import (ShardingRules, abstract_params, constrain,
+                       make_rules, params_shardings, use_rules)

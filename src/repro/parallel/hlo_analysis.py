@@ -1,0 +1,165 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis`` supplies HLO FLOPs and bytes accessed; collective
+traffic is NOT in cost_analysis, so ``collective_stats`` parses the
+(optimized) HLO text and sums operand/result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, converting to per-chip link bytes with the standard
+ring formulas:
+
+  all-gather      T * (g-1)/g      (T = full gathered tensor bytes)
+  reduce-scatter  T * (g-1)/g
+  all-reduce      2T * (g-1)/g
+  all-to-all      T * (g-1)/g
+  collective-permute  T
+
+Hardware constants (TPU v5e): 197e12 bf16 FLOP/s, 819e9 B/s HBM,
+~50e9 B/s/link ICI (one link-direction per chip modeled).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    per_op_bytes: dict[str, float] = field(default_factory=dict)
+    per_op_count: dict[str, int] = field(default_factory=dict)
+    link_bytes: float = 0.0          # per-chip bytes over ICI
+    raw_bytes: float = 0.0           # sum of tensor sizes (diagnostic)
+
+    def dominant(self) -> str:
+        if not self.per_op_bytes:
+            return "none"
+        return max(self.per_op_bytes, key=self.per_op_bytes.get)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[line_start:line_end if line_end > 0 else None]
+        # async pairs appear as -start/-done; count once (on -start)
+        if "-done(" in line:
+            continue
+        T = _shape_bytes(shape_txt)
+        g = _group_size(line)
+        if op == "all-reduce":
+            link = 2.0 * T * (g - 1) / max(g, 1)
+        elif op == "collective-permute":
+            link = float(T)
+        else:
+            link = float(T) * (g - 1) / max(g, 1)
+        stats.per_op_bytes[op] = stats.per_op_bytes.get(op, 0.0) + link
+        stats.per_op_count[op] = stats.per_op_count.get(op, 0) + 1
+        stats.link_bytes += link
+        stats.raw_bytes += T
+    del seen_done
+    return stats
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[n_groups,group_size]<=[total]
+        return int(m.group(2))
+    return 2
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    link_bytes: float
+    n_chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.link_bytes / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "link_bytes_per_chip": self.link_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "n_chips": self.n_chips,
+        }
+
+
+def roofline_from_compiled(compiled, n_chips: int,
+                           hlo_text: str | None = None) -> Roofline:
+    """Build the three-term roofline from a compiled executable.
+
+    jax cost_analysis on an SPMD-partitioned executable reports
+    *per-partition* FLOPs/bytes (the analysis runs on the partitioned
+    module), so the terms below are per-chip as required.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_stats(text)
+    return Roofline(flops, hbm, coll.link_bytes, n_chips)

@@ -1,0 +1,11 @@
+"""Shared test config. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real (single) CPU device; only launch/dryrun.py forces 512
+placeholder devices."""
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro", deadline=None,
+    suppress_health_check=[HealthCheck.too_slow,
+                           HealthCheck.data_too_large])
+settings.load_profile("repro")

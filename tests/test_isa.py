@@ -1,0 +1,116 @@
+"""ISA: byte-exact encode/decode round trips (hypothesis) + IDU
+dispatch semantics."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.isa import (Epilogue, Instruction, LMUBody, MIUBody,
+                            MMUBody, OpType, Program, SFUBody, UnitKind,
+                            disassemble, mk)
+
+u8 = st.integers(0, 255)
+u16 = st.integers(0, 2**16 - 1)
+u32 = st.integers(0, 2**32 - 1)
+
+
+miu_bodies = st.builds(
+    MIUBody, ddr_addr=u32, src_lmu=u8, des_lmu=u8, M=u32, N=u32,
+    start_row=u32, end_row=u32, start_col=u32, end_col=u32, layer_id=u16,
+    deps=st.lists(u16, max_size=8).map(tuple))
+sfu_bodies = st.builds(SFUBody, src_lmu=u8, des_lmu=u8, count=u16,
+                       ele_num=u32)
+lmu_bodies = st.builds(
+    LMUBody, ping_buf=u8, pong_buf=u8, load_op=u8, send_op=u8,
+    src_pu=u8, des_pu=u8, count=u16, start_row=u32, end_row=u32,
+    start_col=u32, end_col=u32, role=u8, group=u8)
+mmu_bodies = st.builds(
+    MMUBody, ping_op=u8, pong_op=u8, bound_i=u32, bound_k=u32,
+    bound_j=u32, src_lmu=u8, src_lmu_rhs=u8, des_lmu=u8,
+    accumulate=u8, epilogue=st.integers(0, len(Epilogue) - 1), count=u16)
+
+
+def _instr(op, body):
+    return st.tuples(st.booleans(), u8).map(
+        lambda t: mk(body.OP_TYPES and _unit_for(op), t[1], op, body,
+                     is_last=t[0]))
+
+
+def _unit_for(op: OpType) -> UnitKind:
+    name = op.name.split("_")[0]
+    return UnitKind[name] if name in UnitKind.__members__ else UnitKind.IDU
+
+
+instructions = st.one_of(
+    st.tuples(st.sampled_from([OpType.MIU_LOAD, OpType.MIU_STORE]),
+              miu_bodies),
+    st.tuples(st.sampled_from([OpType.SFU_SOFTMAX, OpType.SFU_GELU,
+                               OpType.SFU_LAYERNORM, OpType.SFU_RELU,
+                               OpType.SFU_RELU2, OpType.SFU_SILU]),
+              sfu_bodies),
+    st.tuples(st.sampled_from([OpType.LMU_CFG, OpType.LMU_MOVE]),
+              lmu_bodies),
+    st.tuples(st.just(OpType.MMU_GEMM), mmu_bodies),
+).flatmap(lambda ob: st.tuples(st.booleans(), u8).map(
+    lambda t: mk(_unit_for(ob[0]), t[1], ob[0], ob[1], is_last=t[0])))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(instructions, min_size=1, max_size=40))
+def test_program_roundtrip(instrs):
+    prog = Program(instrs)
+    raw = prog.encode()
+    back = Program.decode(raw)
+    assert back.encode() == raw
+    assert len(back) == len(prog)
+    for a, b in zip(prog.instructions, back.instructions):
+        assert a.op_type == b.op_type
+        assert a.unit_kind == b.unit_kind
+        assert a.unit_index == b.unit_index
+        assert a.is_last == b.is_last
+        assert type(a.body) is type(b.body)
+        assert a.body.pack() == b.body.pack()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(instructions, min_size=1, max_size=30))
+def test_header_valid_length_consistency(instrs):
+    """valid_length in the header equals the exact body byte length —
+    the IDU can skip bodies without decoding them."""
+    import struct
+    raw = Program(instrs).encode()
+    off, count = 0, 0
+    while off < len(raw):
+        (hdr,) = struct.unpack_from("<I", raw, off)
+        blen = hdr & 0xFFF
+        off += 4 + blen
+        count += 1
+    assert off == len(raw)
+    assert count == len(instrs)
+
+
+def test_dispatch_routes_and_halts():
+    b = SFUBody(0, 1, 4, 4)
+    p = Program([
+        mk(UnitKind.SFU, 0, OpType.SFU_GELU, b),
+        mk(UnitKind.SFU, 1, OpType.SFU_GELU, b),
+        mk(UnitKind.SFU, 0, OpType.SFU_GELU, b, is_last=True),
+    ])
+    streams = p.dispatch()
+    assert len(streams[(UnitKind.SFU, 0)]) == 2
+    assert len(streams[(UnitKind.SFU, 1)]) == 1
+    # instruction after is_last is a protocol violation
+    p.append(mk(UnitKind.SFU, 0, OpType.SFU_GELU, b))
+    with pytest.raises(ValueError):
+        p.dispatch()
+
+
+def test_body_op_mismatch_rejected():
+    with pytest.raises(TypeError):
+        mk(UnitKind.MMU, 0, OpType.MMU_GEMM, SFUBody(0, 0, 1, 1))
+
+
+def test_disassemble_smoke():
+    p = Program([mk(UnitKind.MMU, 2, OpType.MMU_GEMM,
+                    MMUBody(1, 0, 8, 8, 8, 0, 1, 2), is_last=True)])
+    text = disassemble(p)
+    assert "MMU2" in text and "bound_i=8" in text and "[LAST]" in text

@@ -1,0 +1,220 @@
+"""Pallas kernel sweeps: every kernel validated in interpret mode
+against the ref.py jnp oracle across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flex_gemm import flex_gemm_pallas
+from repro.kernels.sfu import (gelu_rows_pallas, layernorm_rows_pallas,
+                               rmsnorm_rows_pallas, softmax_rows_pallas)
+from repro.kernels.ssd import ssd_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+def _tol(dtype):
+    return (2e-2, 2e-2) if dtype == jnp.bfloat16 else (2e-5, 2e-5)
+
+
+# ------------------------------------------------------------------ gemm
+
+GEMM_SHAPES = [(128, 128, 128), (100, 200, 300), (7, 33, 129),
+               (256, 512, 384), (1, 17, 5), (130, 257, 131),
+               (512, 64, 1024)]
+
+
+@pytest.mark.parametrize("shape", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flex_gemm_shapes_dtypes(shape, dtype):
+    M, K, N = shape
+    a, b = _arr((M, K), dtype), _arr((K, N), dtype)
+    out = flex_gemm_pallas(a, b, block_m=128, block_k=128, block_n=128,
+                           interpret=True)
+    want = ref.gemm(a, b)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=rtol, atol=atol * K ** 0.5)
+
+
+@pytest.mark.parametrize("epilogue", ["gelu", "relu", "relu2", "silu",
+                                      "bias", "bias_gelu", "bias_relu2"])
+def test_flex_gemm_epilogues(epilogue):
+    a, b = _arr((96, 160)), _arr((160, 224))
+    bias = _arr((224,)) if "bias" in epilogue else None
+    out = flex_gemm_pallas(a, b, bias, block_m=64, block_k=64,
+                           block_n=128, epilogue=epilogue, interpret=True)
+    want = ref.gemm(a, b, bias, epilogue)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 150), st.integers(1, 150), st.integers(1, 150))
+def test_flex_gemm_dynamic_bounds_property(M, K, N):
+    """One kernel program (fixed block shape) serves arbitrary operand
+    shapes — the dynamic-loop-bound property."""
+    a, b = _arr((M, K)), _arr((K, N))
+    out = flex_gemm_pallas(a, b, block_m=64, block_k=64, block_n=128,
+                           interpret=True)
+    np.testing.assert_allclose(out, ref.gemm(a, b), rtol=2e-5,
+                               atol=2e-4)
+
+
+# ------------------------------------------------------------------- sfu
+
+SFU_SHAPES = [(64, 128), (100, 300), (8, 17), (256, 512), (5, 1000)]
+
+
+@pytest.mark.parametrize("shape", SFU_SHAPES)
+def test_sfu_softmax(shape):
+    x = _arr(shape, scale=3.0)
+    np.testing.assert_allclose(softmax_rows_pallas(x, interpret=True),
+                               ref.softmax_rows(x), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SFU_SHAPES)
+def test_sfu_layernorm_affine(shape):
+    x = _arr(shape)
+    g, b = _arr((shape[1],)), _arr((shape[1],))
+    np.testing.assert_allclose(
+        layernorm_rows_pallas(x, g, b, interpret=True),
+        ref.layernorm_rows(x, g, b), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SFU_SHAPES)
+def test_sfu_rmsnorm(shape):
+    x = _arr(shape)
+    g = _arr((shape[1],))
+    np.testing.assert_allclose(rmsnorm_rows_pallas(x, g, interpret=True),
+                               ref.rmsnorm_rows(x, g), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_sfu_gelu():
+    x = _arr((64, 200))
+    np.testing.assert_allclose(gelu_rows_pallas(x, interpret=True),
+                               ref.gelu_rows(x), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- flash attention
+
+ATTN_SHAPES = [(1, 4, 2, 64, 64, 32), (2, 8, 2, 32, 128, 64),
+               (1, 2, 1, 1, 96, 32), (1, 4, 4, 50, 50, 16),
+               (1, 2, 2, 1, 500, 64), (2, 6, 3, 40, 100, 32)]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(shape, causal):
+    B, Hq, Hkv, Sq, Skv, D = shape
+    q = _arr((B, Hq, Sq, D))
+    k = _arr((B, Hkv, Skv, D))
+    v = _arr((B, Hkv, Skv, D))
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=32,
+                                 block_k=64, interpret=True)
+    want = ref.mha_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = _arr((1, 4, 32, 64), jnp.bfloat16)
+    k = _arr((1, 2, 64, 64), jnp.bfloat16)
+    v = _arr((1, 2, 64, 64), jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, block_q=32, block_k=32,
+                                 interpret=True)
+    want = ref.mha_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_chunked_attention_matches_dense():
+    q = _arr((2, 4, 64, 32))
+    k = _arr((2, 2, 64, 32))
+    v = _arr((2, 2, 64, 32))
+    for causal in (True, False):
+        a = ref.mha_attention(q, k, v, causal=causal)
+        b = ref.mha_attention_chunked(q, k, v, causal=causal, q_chunk=16)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------- ssd
+
+def _ssd_inputs(B, S, H, P, G, N):
+    x = _arr((B, S, H, P))
+    a = jnp.asarray(-np.abs(RNG.normal(size=(B, S, H))) * 0.1, jnp.float32)
+    b = _arr((B, S, G, N), scale=0.3)
+    c = _arr((B, S, G, N), scale=0.3)
+    return x, a, b, c
+
+
+@pytest.mark.parametrize("dims", [(2, 128, 4, 16, 2, 8),
+                                  (1, 64, 2, 8, 1, 4),
+                                  (2, 256, 8, 32, 2, 16)])
+def test_ssd_chunked_oracle_matches_scan(dims):
+    x, a, b, c = _ssd_inputs(*dims)
+    y1, s1 = ref.ssd_scan(x, a, b, c)
+    y2, s2 = ref.ssd_chunked(x, a, b, c, chunk=32)
+    np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_ssd_pallas_kernel(chunk):
+    B, S, H, P, G, N = 2, 128, 4, 16, 2, 8
+    x, a, b, c = _ssd_inputs(B, S, H, P, G, N)
+    rep = H // G
+    xf = jnp.moveaxis(x, 2, 1).reshape(B * H, S, P)
+    af = jnp.moveaxis(a, 2, 1).reshape(B * H, S)
+    bf = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    cf = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    y = ssd_pallas(xf, af, bf, cf, chunk=chunk, interpret=True)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    want, _ = ref.ssd_scan(x, a, b, c)
+    np.testing.assert_allclose(y, want, rtol=5e-5, atol=5e-5)
+
+
+def test_ssd_ops_wrapper_tail_masking():
+    from repro.kernels import ops
+    ops.set_kernel_mode("pallas")
+    try:
+        B, S, H, P, G, N = 1, 100, 2, 8, 1, 4
+        x, a, b, c = _ssd_inputs(B, S, H, P, G, N)
+        y, _ = ops.ssd(x, a, b, c, chunk=64)
+        want, _ = ref.ssd_scan(x, a, b, c)
+        np.testing.assert_allclose(y, want, rtol=5e-5, atol=5e-5)
+    finally:
+        ops.set_kernel_mode("auto")
+
+
+def test_ssd_decode_step_matches_scan():
+    from repro.kernels import ops
+    B, S, H, P, G, N = 1, 40, 2, 8, 1, 4
+    x, a, b, c = _ssd_inputs(B, S, H, P, G, N)
+    want, _ = ref.ssd_scan(x, a, b, c)
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    outs = []
+    for t in range(S):
+        y, state = ops.ssd_decode_step(x[:, t], a[:, t], b[:, t],
+                                       c[:, t], state)
+        outs.append(y)
+    np.testing.assert_allclose(jnp.stack(outs, 1), want,
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_flex_gemm_grad_path_uses_oracle():
+    """ops.linear is differentiable on CPU (oracle path)."""
+    from repro.kernels import ops
+    x = _arr((8, 16))
+    w = _arr((16, 4))
+    g = jax.grad(lambda w_: jnp.sum(ops.linear(x, w_) ** 2))(w)
+    assert g.shape == w.shape and bool(jnp.isfinite(g).all())

@@ -1,0 +1,183 @@
+"""End-to-end behaviour tests for the paper's system: the full DORA
+pipeline on the paper's workloads, the paper's headline claims, and the
+training/serving drivers."""
+
+import numpy as np
+import pytest
+
+from repro.configs import paper_models
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
+                        GAConfig, MilpScheduler, Policy,
+                        build_candidate_table, search_template, simulate)
+
+PLAT = DoraPlatform.vck190()
+
+
+# ------------------------------------------------------------ full pipeline
+
+def test_full_pipeline_bert_s():
+    g = paper_models.bert_s()
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(g, CompileOptions(engine="milp", time_budget_s=5.0))
+    res.schedule.validate(g, PLAT)
+    assert res.throughput_gflops > 0
+    # binary instruction stream exists and round-trips
+    raw = res.codegen.program.encode()
+    assert len(raw) > 0
+    # timing backend
+    rep = simulate(res.codegen, PLAT)
+    assert rep.makespan_s > 0
+    # numeric backend == numpy oracle
+    inputs = g.random_inputs(0)
+    ref = g.reference_execute(inputs)
+    out = comp.execute(res, inputs)
+    last = g.layers[-1].name
+    np.testing.assert_allclose(out[last], ref[last], rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("model", ["MLP-S", "NCF-L", "PointNet-S"])
+def test_pipeline_numerics_all_models(model):
+    g = paper_models.get(model)
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(g, CompileOptions(engine="list"))
+    inputs = g.random_inputs(1)
+    ref = g.reference_execute(inputs)
+    out = comp.execute(res, inputs)
+    for l in g.layers:
+        # atol scales with output magnitude: tiled K-accumulation
+        # reorders fp32 sums vs the oracle's single dot
+        scale = max(float(np.max(np.abs(ref[l.name]))), 1.0)
+        np.testing.assert_allclose(out[l.name], ref[l.name],
+                                   rtol=2e-3, atol=2e-5 * scale)
+
+
+# --------------------------------------------------------- headline claims
+
+def test_dora_beats_baselines_on_diverse_workloads():
+    """Fig. 11: DORA > best(CHARM-a, RSN) on the diverse/small models,
+    parity (small gains) on uniform MLP-L."""
+    def tput(g, policy):
+        comp = DoraCompiler(PLAT, policy)
+        return comp.compile(g, CompileOptions(engine="list")).throughput_gflops
+
+    for name in ("NCF-L", "BERT-S", "PointNet-S"):
+        g = paper_models.get(name)
+        dora = tput(g, Policy.dora())
+        base = max(tput(g, Policy.charm_a()), tput(g, Policy.rsn()))
+        assert dora > base * 1.15, (name, dora, base)
+
+    g = paper_models.mlp_l()
+    dora = tput(g, Policy.dora())
+    charm = tput(g, Policy.charm_a())
+    assert dora >= charm * 0.95            # no regression
+    assert dora <= charm * 1.5             # "small gains" on MLP-L
+
+
+def test_ablations_ordering():
+    """FP and FM each contribute; full DORA >= each ablation (Fig. 11)."""
+    g = paper_models.ncf_l()
+
+    def tput(policy):
+        comp = DoraCompiler(PLAT, policy)
+        return comp.compile(g, CompileOptions(engine="list")).throughput_gflops
+
+    full = tput(Policy.dora())
+    fp = tput(Policy.dora_fp_only())
+    fm = tput(Policy.dora_fm_only())
+    assert full >= fp * 0.999 and full >= fm * 0.999
+
+
+def test_ga_reaches_90pct_of_milp_on_deit_s():
+    g = paper_models.deit_s()
+    table = build_candidate_table(g, PLAT, Policy.dora())
+    milp = MilpScheduler(PLAT, time_budget_s=15.0).solve(g, table)
+    from repro.core import GAScheduler
+    ga = GAScheduler(PLAT, GAConfig(population=40, generations=40,
+                                    seed=0, time_budget_s=20.0)
+                     ).solve(g, table)
+    optimality = milp.schedule.makespan / ga.best_makespan
+    assert optimality >= 0.85, optimality   # paper: up to 90%
+
+
+def test_architecture_template_search():
+    graphs = [paper_models.bert_s(), paper_models.ncf_s()]
+    best, score = search_template(
+        graphs, mmu_options=(2, 6), lmu_options=(8, 14),
+        sfu_options=(1, 3), area_budget=600.0)
+    assert best.n_mmu in (2, 6) and score > 0
+    # more compute should never be worse under the same budgetless eval
+    from repro.core.arch_gen import ArchTemplate, evaluate_template
+    small = evaluate_template(ArchTemplate(2, 8, 1), graphs)
+    big = evaluate_template(ArchTemplate(6, 14, 3), graphs)
+    assert big <= small * 1.001
+
+
+# ----------------------------------------------------------- training stack
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    from repro.configs import get_config
+    from repro.configs.shapes import ShapeSpec
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.train import TrainOptions, Trainer
+
+    cfg = get_config("qwen3-4b", reduced=True)
+    mesh = make_local_mesh()
+    shape = ShapeSpec("t", 64, 8, "train")
+    tr = Trainer(cfg, mesh, shape, options=TrainOptions(
+        steps=40, ckpt_every=10, ckpt_dir=str(tmp_path), log_every=1000))
+    tr.run()
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05
+    # resume continues from the checkpoint, not from scratch
+    tr2 = Trainer(cfg, mesh, shape, options=TrainOptions(
+        steps=45, ckpt_every=10, ckpt_dir=str(tmp_path), log_every=1000))
+    tr2.run()
+    steps2 = [m["step"] for m in tr2.metrics_log]
+    assert min(steps2) == 40
+
+
+def test_trainer_survives_injected_fault(tmp_path):
+    from repro.configs import get_config
+    from repro.configs.shapes import ShapeSpec
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.train import TrainOptions, Trainer
+
+    cfg = get_config("mamba2-2.7b", reduced=True)
+    tr = Trainer(cfg, make_local_mesh(), ShapeSpec("t", 32, 4, "train"),
+                 options=TrainOptions(steps=16, ckpt_every=5,
+                                      ckpt_dir=str(tmp_path),
+                                      fail_at_step=8, log_every=1000))
+    tr.run()
+    assert tr.failures == 1
+    assert max(m["step"] for m in tr.metrics_log) == 15
+
+
+def test_batch_server_greedy_deterministic():
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.serve import BatchServer, Request
+
+    cfg = get_config("qwen2-vl-2b", reduced=True)
+    server = BatchServer(cfg, make_local_mesh(), max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+    r1 = server.serve([Request(0, prompts[0], 8), Request(1, prompts[1], 8)])
+    r2 = server.serve([Request(0, prompts[0], 8), Request(1, prompts[1], 8)])
+    assert r1["outputs"] == r2["outputs"]
+    assert all(len(v) == 8 for v in r1["outputs"].values())
+
+
+def test_step_bundle_compiles_on_local_mesh():
+    """The same bundle the 512-chip dry-run uses, on the local mesh."""
+    from repro.configs import get_config
+    from repro.configs.shapes import ShapeSpec
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import make_step
+
+    cfg = get_config("internlm2-20b", reduced=True)
+    mesh = make_local_mesh()
+    for kind in ("train", "prefill", "decode"):
+        bundle = make_step(cfg, mesh, ShapeSpec("s", 32, 4, kind))
+        compiled = bundle.lower().compile()
+        assert compiled.cost_analysis() is not None
