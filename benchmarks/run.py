@@ -5,6 +5,7 @@
                     + FP/FM ablations + simulator cross-check)
   bench_dse       — Fig. 12 (DAG partitioning; GA vs MILP optimality)
   bench_kernels   — kernel micro-bench + TPU tile plans
+  bench_multi_tenant — multi-DNN co-scheduling: joint vs sequential
   roofline        — §Roofline table from the dry-run artifacts
 
 Prints ``name,value,derived`` CSV.
@@ -16,12 +17,13 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_dse, bench_e2e, bench_kernels,
-                            bench_single_pe, roofline)
+                            bench_multi_tenant, bench_single_pe, roofline)
     mods = {
         "single_pe": bench_single_pe,
         "e2e": bench_e2e,
         "dse": bench_dse,
         "kernels": bench_kernels,
+        "multi_tenant": bench_multi_tenant,
         "roofline": roofline,
     }
     want = sys.argv[1:] or list(mods)

@@ -9,6 +9,7 @@ from .graph import Layer, LayerKind, NonLinear, WorkloadGraph, mlp_graph, random
 from .isa import (Epilogue, Instruction, LMUBody, LmuRole, MIUBody, MMUBody,
                   OpType, Program, SFUBody, UnitKind, disassemble, mk)
 from .milp import MilpScheduler, SolveResult
+from .multi_tenant import (MergedWorkload, MultiTenantWorkload, TenantSpec)
 from .partition import PartitionedResult, partitioned_solve, split_segments
 from .perf_model import (CandidateMode, DoraPlatform, Policy, TilePlan,
                          TpuGemmTiles, build_candidate_table,
@@ -16,6 +17,6 @@ from .perf_model import (CandidateMode, DoraPlatform, Policy, TilePlan,
                          plan_tpu_gemm_tiles, single_pe_efficiency)
 from .runtime import DoraRuntime
 from .schedule import Schedule, ScheduleEntry, list_schedule, sequential_schedule
-from .simulator import SimReport, simulate
+from .simulator import SimReport, TenantSimStats, simulate
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -72,6 +72,7 @@ class InstrMeta:
     mmu_cycles: int = 0                             # MMU compute cycles
     layer_id: int = -1
     unit_key: tuple[UnitKind, int] = (UnitKind.IDU, 0)
+    tenant: int = -1                                # multi-tenant tag
 
 
 @dataclass
@@ -81,10 +82,13 @@ class CodegenResult:
     meta: list[InstrMeta]
     # layer id -> index of the store instruction that marks it ready
     ready_store: dict[int, int] = field(default_factory=dict)
+    # layer id -> tenant index (empty for single-tenant programs)
+    tenant_of: dict[int, int] = field(default_factory=dict)
 
 
 def generate(graph: WorkloadGraph, schedule: Schedule,
-             platform: DoraPlatform) -> CodegenResult:
+             platform: DoraPlatform,
+             tenant_of: dict[int, int] | None = None) -> CodegenResult:
     memmap = MemoryMap()
     for name, (r, c) in graph.inputs.items():
         memmap.alloc(name, r, c, platform.dtype_bytes)
@@ -97,6 +101,8 @@ def generate(graph: WorkloadGraph, schedule: Schedule,
 
     def emit(instr: Instruction, m: InstrMeta) -> int:
         m.unit_key = (instr.unit_kind, instr.unit_index)
+        if tenant_of is not None and m.layer_id >= 0:
+            m.tenant = tenant_of.get(m.layer_id, -1)
         program.append(instr)
         meta.append(m)
         return len(program) - 1
@@ -265,7 +271,8 @@ def generate(graph: WorkloadGraph, schedule: Schedule,
                              g_out, g_nl, sfu_id, ready_store)
 
     _finalize_is_last(program)
-    return CodegenResult(program, memmap, meta, ready_store)
+    return CodegenResult(program, memmap, meta, ready_store,
+                         dict(tenant_of or {}))
 
 
 def _emit_streamed_nl(layer, entry, memmap, platform, emit, dep_ids,

@@ -19,6 +19,7 @@ from .codegen import CodegenResult, generate
 from .ga import GAConfig, GAResult, GAScheduler
 from .graph import WorkloadGraph
 from .milp import MilpScheduler, SolveResult
+from .multi_tenant import MultiTenantWorkload
 from .partition import partitioned_solve
 from .perf_model import (CandidateMode, DoraPlatform, Policy,
                          build_candidate_table)
@@ -48,10 +49,26 @@ class CompileResult:
     codegen_s: float
     solver_trace: list[tuple[float, float]] = field(default_factory=list)
     optimal: bool | None = None
+    # multi-tenant compilations only:
+    workload: MultiTenantWorkload | None = None
+    tenant_of: dict[int, int] = field(default_factory=dict)
+    release: dict[int, float] = field(default_factory=dict)
 
     @property
     def makespan_s(self) -> float:
         return self.schedule.makespan
+
+    def per_tenant_makespan(self) -> dict[str, float]:
+        """Tenant name -> completion of its last layer minus its
+        arrival (the tenant's service latency in the joint schedule)."""
+        if self.workload is None:
+            return {self.graph.name: self.makespan_s}
+        finish: dict[int, float] = {}
+        for e in self.schedule.entries:
+            ti = self.tenant_of[e.layer_id]
+            finish[ti] = max(finish.get(ti, 0.0), e.end)
+        return {t.name: finish.get(ti, t.arrival_s) - t.arrival_s
+                for ti, t in enumerate(self.workload.tenants)}
 
     @property
     def throughput_gflops(self) -> float:
@@ -69,21 +86,39 @@ class DoraCompiler:
         self.policy = policy or Policy.dora()
 
     # ------------------------------------------------------------- stage 1+2
-    def compile(self, graph: WorkloadGraph,
+    def compile(self, workload: WorkloadGraph | MultiTenantWorkload,
                 options: CompileOptions | None = None) -> CompileResult:
         options = options or CompileOptions()
+        if isinstance(workload, MultiTenantWorkload):
+            merged = workload.merge()
+            graph = merged.graph
+            release = merged.release
+            priorities = merged.priorities
+            tenant_of = merged.tenant_of
+            mmu_cap = workload.mmu_cap
+            mt_workload = workload
+        else:
+            graph = workload
+            release = {}
+            priorities = None
+            tenant_of = {}
+            mmu_cap = None
+            mt_workload = None
         graph.validate()
 
         t0 = time.perf_counter()
-        candidates = build_candidate_table(graph, self.platform, self.policy)
+        candidates = build_candidate_table(graph, self.platform, self.policy,
+                                           max_mmu=mmu_cap)
         t1 = time.perf_counter()
 
         trace: list[tuple[float, float]] = []
         optimal: bool | None = None
         if self.policy.monolithic or options.engine == "sequential":
-            schedule = sequential_schedule(graph, candidates, self.platform)
+            schedule = sequential_schedule(graph, candidates, self.platform,
+                                           release=release)
         elif options.engine == "list":
-            schedule = list_schedule(graph, candidates, self.platform)
+            schedule = list_schedule(graph, candidates, self.platform,
+                                     priorities=priorities, release=release)
         elif options.engine in ("milp", "ga"):
             if options.engine == "milp":
                 def make_engine():
@@ -95,12 +130,20 @@ class DoraCompiler:
                     cfg = options.ga
                     return GAScheduler(self.platform, cfg)
             if options.n_segments > 1:
+                if release and any(release.values()):
+                    raise ValueError(
+                        "partitioned DSE (n_segments > 1) does not support "
+                        "tenant arrival offsets; use n_segments=1")
                 res = partitioned_solve(graph, candidates, self.platform,
                                         options.n_segments, make_engine)
                 schedule, trace = res.schedule, res.trace
             else:
                 engine = make_engine()
-                res = engine.solve(graph, candidates)
+                if isinstance(engine, GAScheduler):
+                    res = engine.solve(graph, candidates, release=release,
+                                       seed_priorities=priorities)
+                else:
+                    res = engine.solve(graph, candidates, release=release)
                 schedule = res.schedule
                 trace = list(res.trace)
                 if isinstance(res, SolveResult):
@@ -109,13 +152,13 @@ class DoraCompiler:
             raise ValueError(f"unknown engine {options.engine!r}")
         t2 = time.perf_counter()
 
-        schedule.validate(graph, self.platform)
-        cg = generate(graph, schedule, self.platform)
+        schedule.validate(graph, self.platform, release=release)
+        cg = generate(graph, schedule, self.platform, tenant_of=tenant_of)
         t3 = time.perf_counter()
 
         return CompileResult(graph, self.platform, self.policy, candidates,
                              schedule, cg, t1 - t0, t2 - t1, t3 - t2,
-                             trace, optimal)
+                             trace, optimal, mt_workload, tenant_of, release)
 
     # -------------------------------------------------------------- backends
     def execute(self, result: CompileResult,
@@ -127,4 +170,8 @@ class DoraCompiler:
         return rt.execute(result.codegen.program)
 
     def simulate(self, result: CompileResult) -> SimReport:
-        return simulate(result.codegen, self.platform)
+        arrivals = None
+        if result.workload is not None:
+            arrivals = {ti: t.arrival_s
+                        for ti, t in enumerate(result.workload.tenants)}
+        return simulate(result.codegen, self.platform, arrivals=arrivals)

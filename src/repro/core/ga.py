@@ -50,14 +50,21 @@ class GAScheduler:
 
     def _decode(self, graph: WorkloadGraph,
                 candidates: dict[int, list[CandidateMode]],
-                priorities: np.ndarray, modes: np.ndarray) -> Schedule:
+                priorities: np.ndarray, modes: np.ndarray,
+                release: dict[int, float] | None = None) -> Schedule:
         n = len(graph.layers)
         prio = {i: float(priorities[i]) for i in range(n)}
         choice = {i: int(modes[i]) for i in range(n)}
-        return list_schedule(graph, candidates, self.platform, prio, choice)
+        return list_schedule(graph, candidates, self.platform, prio, choice,
+                             release=release)
 
     def solve(self, graph: WorkloadGraph,
-              candidates: dict[int, list[CandidateMode]]) -> GAResult:
+              candidates: dict[int, list[CandidateMode]],
+              release: dict[int, float] | None = None,
+              seed_priorities: dict[int, float] | None = None) -> GAResult:
+        """``seed_priorities`` (multi-tenant): one individual starts
+        from the caller's priority bias instead of topological order;
+        evolution is free to move away from it."""
         cfg = self.config
         rng = np.random.default_rng(cfg.seed)
         t0 = time.perf_counter()
@@ -71,9 +78,15 @@ class GAScheduler:
         prio[0] = np.linspace(0.0, 1.0, n)
         modes[0] = [int(np.argmin([c.latency_s for c in candidates[i]]))
                     for i in range(n)]
+        if seed_priorities and n > 1:
+            raw = np.array([seed_priorities.get(i, float(i))
+                            for i in range(n)])
+            span = raw.max() - raw.min()
+            prio[1] = (raw - raw.min()) / span if span > 0 else 0.5
+            modes[1] = modes[0]
 
         def fitness(p, m) -> tuple[float, Schedule]:
-            s = self._decode(graph, candidates, p, m)
+            s = self._decode(graph, candidates, p, m, release)
             return s.makespan, s
 
         fits: list[float] = []
@@ -131,6 +144,6 @@ class GAScheduler:
                 best_f, best_s = fits[gi], scheds[gi]
                 trace.append((time.perf_counter() - t0, best_f))
 
-        best_s.validate(graph, self.platform)
+        best_s.validate(graph, self.platform, release=release)
         return GAResult(best_s, best_f, gens,
                         time.perf_counter() - t0, trace)

@@ -205,6 +205,20 @@ class WorkloadGraph:
                 env[l.name] = out
         return env
 
+    def namespaced_copy(self, prefix: str, sep: str = "::") -> "WorkloadGraph":
+        """A copy with every tensor/layer name prefixed ``prefix::name``
+        — the multi-tenant merge uses this so N tenants' tensors never
+        collide in the joint DRAM memory map."""
+        def nm(n: str) -> str:
+            return f"{prefix}{sep}{n}" if n else n
+
+        g = WorkloadGraph(nm(self.name))
+        g.inputs = {nm(k): v for k, v in self.inputs.items()}
+        g.layers = [Layer(l.id, nm(l.name), l.kind, l.M, l.K, l.N,
+                          l.nonlinear, nm(l.lhs), nm(l.rhs), l.deps)
+                    for l in self.layers]
+        return g
+
     def random_inputs(self, seed: int = 0) -> dict[str, np.ndarray]:
         rng = np.random.default_rng(seed)
         return {name: rng.normal(size=shape, scale=0.5).astype(np.float32)

@@ -51,8 +51,10 @@ class MilpScheduler:
         self.max_nodes = max_nodes
 
     def solve(self, graph: WorkloadGraph,
-              candidates: dict[int, list[CandidateMode]]) -> SolveResult:
+              candidates: dict[int, list[CandidateMode]],
+              release: dict[int, float] | None = None) -> SolveResult:
         t0 = time.perf_counter()
+        release = release or {}
         layers = {l.id: l for l in graph.layers}
         succ = graph.successors()
         min_lat = {lid: min(c.latency_s for c in cands)
@@ -66,7 +68,8 @@ class MilpScheduler:
 
         # warm start: greedy list schedule with critical-path priorities
         warm = list_schedule(graph, candidates, self.platform,
-                             priorities={lid: -tail[lid] for lid in tail})
+                             priorities={lid: -tail[lid] for lid in tail},
+                             release=release)
         incumbent = warm
         best = warm.makespan
         trace = [(time.perf_counter() - t0, best)]
@@ -86,6 +89,7 @@ class MilpScheduler:
             for lid in remaining:
                 ready_at = max((finish.get(d, 0.0)
                                 for d in layers[lid].deps), default=0.0)
+                ready_at = max(ready_at, release.get(lid, 0.0))
                 cp = max(cp, ready_at + tail[lid])
             # LB-res
             lb_res = 0.0
@@ -126,6 +130,7 @@ class MilpScheduler:
             for lid in ready:
                 dep_done = max((finish[d] for d in layers[lid].deps),
                                default=0.0)
+                dep_done = max(dep_done, release.get(lid, 0.0))
                 for mode in sorted(candidates[lid],
                                    key=lambda c: c.latency_s):
                     t = dep_done
@@ -168,5 +173,5 @@ class MilpScheduler:
         dfs({}, {l.id for l in graph.layers}, pools)
 
         elapsed = time.perf_counter() - t0
-        incumbent.validate(graph, self.platform)
+        incumbent.validate(graph, self.platform, release=release)
         return SolveResult(incumbent, optimal, nodes, elapsed, trace)

@@ -346,7 +346,10 @@ def _pe_tile_options(platform: DoraPlatform, policy: Policy):
                     yield (am, ak, an)
 
 
-def _mmu_grid_options(n_mmu: int, policy: Policy):
+def _mmu_grid_options(n_mmu: int, policy: Policy,
+                      max_mmu: int | None = None):
+    if max_mmu is not None:
+        n_mmu = max(1, min(n_mmu, max_mmu))
     if policy.fixed_mmu_grid is not None:
         gm, gn = policy.fixed_mmu_grid
         if gm * gn <= n_mmu:
@@ -361,9 +364,16 @@ def _mmu_grid_options(n_mmu: int, policy: Policy):
 
 def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                                policy: Policy,
-                               max_modes: int = 12) -> list[CandidateMode]:
+                               max_modes: int = 12,
+                               max_mmu: int | None = None
+                               ) -> list[CandidateMode]:
     """Build the candidate table rows for one layer: Pareto-optimal
-    (resources -> latency) execution modes (paper Fig. 8b)."""
+    (resources -> latency) execution modes (paper Fig. 8b).
+
+    ``max_mmu`` caps the MMUs any single mode may claim — the
+    multi-tenant fairness knob: with several tenants resident, capping
+    per-layer parallelism keeps units available for co-scheduled
+    tenants instead of letting one layer monopolize the array."""
     if layer.kind is LayerKind.NL:
         lmus, _ = _operand_lmus(layer.M, layer.N, platform, policy)
         lat = layer_latency(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
@@ -375,7 +385,7 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
     M, K, N = layer.M, layer.K, layer.N
     needs_sfu = layer.nonlinear is not None
     cands: list[CandidateMode] = []
-    for (gm, gn) in _mmu_grid_options(platform.n_mmu, policy):
+    for (gm, gn) in _mmu_grid_options(platform.n_mmu, policy, max_mmu):
         n_mmu_used = gm * gn
         if policy.monolithic and n_mmu_used < min(
                 platform.n_mmu, (policy.fixed_mmu_grid or (1, 1))[0]
@@ -425,8 +435,12 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
 
 
 def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
-                          policy: Policy) -> dict[int, list[CandidateMode]]:
-    """Stage-1 output: layer id -> candidate modes (paper Fig. 6/8)."""
+                          policy: Policy, max_mmu: int | None = None
+                          ) -> dict[int, list[CandidateMode]]:
+    """Stage-1 output: layer id -> candidate modes (paper Fig. 6/8).
+
+    ``max_mmu`` (multi-tenant): per-layer MMU ceiling, see
+    enumerate_layer_candidates."""
     table: dict[int, list[CandidateMode]] = {}
     cache: dict[tuple, list[CandidateMode]] = {}
     for layer in graph.topo_order():
@@ -435,7 +449,8 @@ def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
             table[layer.id] = [replace(c, layer_id=layer.id)
                                for c in cache[key]]
             continue
-        cands = enumerate_layer_candidates(layer, platform, policy)
+        cands = enumerate_layer_candidates(layer, platform, policy,
+                                           max_mmu=max_mmu)
         if not cands:
             raise ValueError(f"no feasible candidate for layer {layer.name} "
                              f"({layer.M}x{layer.K}x{layer.N}) on {platform.name}")

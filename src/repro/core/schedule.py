@@ -6,6 +6,11 @@ concrete set of functional units; validity means (paper Fig. 7):
   - precedence: S_i >= E_j for every dep edge (j -> i)   [line 5]
   - exclusivity: unit intervals never overlap            [lines 7-11]
   - resources: |units| match the mode's requirement      [lines 12-14]
+
+Multi-tenant extension: every scheduler here additionally accepts a
+``release`` map (layer id -> earliest permissible start).  A tenant's
+arrival offset becomes the release time of all its layers; unit
+exclusivity *across* tenants falls out of the shared unit pools.
 """
 
 from __future__ import annotations
@@ -39,7 +44,8 @@ class Schedule:
         return {e.layer_id: e for e in self.entries}
 
     def validate(self, graph: WorkloadGraph, platform: DoraPlatform,
-                 eps: float = 1e-9) -> None:
+                 eps: float = 1e-9,
+                 release: dict[int, float] | None = None) -> None:
         by_layer = self.by_layer()
         if set(by_layer) != {l.id for l in graph.layers}:
             raise ValueError("schedule does not cover every layer exactly once")
@@ -47,6 +53,10 @@ class Schedule:
             e = by_layer[l.id]
             if e.end < e.start - eps:
                 raise ValueError(f"layer {l.id}: end < start")
+            if release and e.start < release.get(l.id, 0.0) - eps:
+                raise ValueError(
+                    f"layer {l.id} starts {e.start} before its release "
+                    f"time {release[l.id]} (tenant not yet arrived)")
             if abs((e.end - e.start) - e.mode.latency_s) > max(
                     1e-6 * e.mode.latency_s, eps):
                 raise ValueError(f"layer {l.id}: duration != mode latency")
@@ -107,7 +117,8 @@ def list_schedule(graph: WorkloadGraph,
                   candidates: dict[int, list[CandidateMode]],
                   platform: DoraPlatform,
                   priorities: dict[int, float] | None = None,
-                  mode_choice: dict[int, int] | None = None) -> Schedule:
+                  mode_choice: dict[int, int] | None = None,
+                  release: dict[int, float] | None = None) -> Schedule:
     """Dependency-aware greedy scheduler (the GA's decoder and the
     baseline heuristic): repeatedly pick the ready layer with the best
     priority and place it at its earliest feasible time on earliest-free
@@ -116,9 +127,11 @@ def list_schedule(graph: WorkloadGraph,
     priorities: smaller = earlier (defaults to topological id).
     mode_choice: layer -> candidate index (defaults to fastest mode that
     fits the platform).
+    release: layer -> earliest permissible start (tenant arrival).
     """
     priorities = priorities or {}
     mode_choice = mode_choice or {}
+    release = release or {}
     lmu = _UnitPool(platform.n_lmu)
     mmu = _UnitPool(platform.n_mmu)
     sfu = _UnitPool(platform.n_sfu)
@@ -132,13 +145,19 @@ def list_schedule(graph: WorkloadGraph,
         ready = [lid for lid in remaining if deps[lid] <= finish.keys()]
         if not ready:
             raise RuntimeError("cycle in graph?")
-        ready.sort(key=lambda lid: (priorities.get(lid, float(lid)), lid))
+        # release first: the serial SGS commits units monotonically, so
+        # placing a not-yet-arrived tenant's layer ahead of arrived work
+        # would wall off the idle window before its release.  Priority
+        # orders layers *within* the same arrival.
+        ready.sort(key=lambda lid: (release.get(lid, 0.0),
+                                    priorities.get(lid, float(lid)), lid))
         lid = ready[0]
         modes = candidates[lid]
         mi = mode_choice.get(lid)
         mode = modes[mi % len(modes)] if mi is not None else \
             min(modes, key=lambda c: c.latency_s)
         dep_done = max((finish[d] for d in deps[lid]), default=0.0)
+        dep_done = max(dep_done, release.get(lid, 0.0))
         # earliest time all unit classes have capacity
         t = dep_done
         for _ in range(64):   # fixed-point on unit availability
@@ -164,13 +183,16 @@ def list_schedule(graph: WorkloadGraph,
 
 def sequential_schedule(graph: WorkloadGraph,
                         candidates: dict[int, list[CandidateMode]],
-                        platform: DoraPlatform) -> Schedule:
+                        platform: DoraPlatform,
+                        release: dict[int, float] | None = None) -> Schedule:
     """Monolithic baseline behaviour (CHARM-a/RSN): layers run strictly
     one after another on the whole array."""
+    release = release or {}
     t = 0.0
     entries = []
     for l in graph.topo_order():
         mode = min(candidates[l.id], key=lambda c: c.latency_s)
+        t = max(t, release.get(l.id, 0.0))
         end = t + mode.latency_s
         entries.append(ScheduleEntry(
             l.id, mode, t, end,

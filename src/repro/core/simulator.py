@@ -13,6 +13,13 @@ Models, at instruction granularity:
 
 Output: per-instruction (start, end) times, per-unit busy time, and the
 makespan — used to validate schedules and to drive Fig. 11 throughput.
+
+Multi-tenant extension: when codegen tagged instructions with tenants,
+``simulate`` additionally (a) holds every tenant's instructions until
+that tenant's arrival time, and (b) reports per-tenant makespan, tail
+latency (p95 of layer completion), and cross-tenant interference — the
+time a tenant's MIU transfers spent queued behind *other* tenants'
+traffic on the single shared MIU.
 """
 
 from __future__ import annotations
@@ -25,12 +32,26 @@ from .perf_model import DoraPlatform
 
 
 @dataclass
+class TenantSimStats:
+    """Per-tenant timing extracted from one multi-tenant simulation."""
+
+    tenant: int
+    arrival_s: float
+    finish_s: float               # absolute end of the tenant's last instr
+    makespan_s: float             # finish_s - arrival_s (service latency)
+    tail_latency_s: float         # p95 of layer completion - arrival_s
+    miu_wait_s: float             # MIU queueing behind OTHER tenants
+    n_instructions: int = 0
+
+
+@dataclass
 class SimReport:
     makespan_s: float
     instr_start: list[float]
     instr_end: list[float]
     unit_busy_s: dict[tuple[UnitKind, int], float]
     layer_ready_s: dict[int, float] = field(default_factory=dict)
+    tenant_stats: dict[int, TenantSimStats] = field(default_factory=dict)
 
     def utilization(self, unit: tuple[UnitKind, int]) -> float:
         if self.makespan_s <= 0:
@@ -61,7 +82,10 @@ def _duration(i: int, result: CodegenResult,
     return 0.0
 
 
-def simulate(result: CodegenResult, platform: DoraPlatform) -> SimReport:
+def simulate(result: CodegenResult, platform: DoraPlatform,
+             arrivals: dict[int, float] | None = None) -> SimReport:
+    """``arrivals``: tenant index -> arrival time; instructions of a
+    tenant never start before it arrives (multi-tenant runs only)."""
     prog = result.program
     n = len(prog)
     start = [-1.0] * n
@@ -69,6 +93,9 @@ def simulate(result: CodegenResult, platform: DoraPlatform) -> SimReport:
     unit_free: dict[tuple[UnitKind, int], float] = {}
     unit_busy: dict[tuple[UnitKind, int], float] = {}
     layer_ready: dict[int, float] = {}
+    # cross-tenant MIU interference accounting
+    last_tenant_on_unit: dict[tuple[UnitKind, int], int] = {}
+    miu_wait: dict[int, float] = {}
 
     # per-unit queues in program (IDU-dispatch) order
     queues: dict[tuple[UnitKind, int], list[int]] = {}
@@ -114,7 +141,19 @@ def simulate(result: CodegenResult, platform: DoraPlatform) -> SimReport:
                             dep_times.append(end[rs])
                 if not ok:
                     break
-                t0 = max([unit_free.get(key, 0.0)] + dep_times)
+                if arrivals and meta.tenant >= 0:
+                    dep_times.append(arrivals.get(meta.tenant, 0.0))
+                ready = max(dep_times, default=0.0)
+                t0 = max(unit_free.get(key, 0.0), ready)
+                # time this transfer queued on the shared MIU behind a
+                # different tenant's traffic = cross-tenant interference
+                if (instr.op_type in (OpType.MIU_LOAD, OpType.MIU_STORE)
+                        and meta.tenant >= 0 and t0 > ready
+                        and last_tenant_on_unit.get(key, meta.tenant)
+                        != meta.tenant):
+                    miu_wait[meta.tenant] = (miu_wait.get(meta.tenant, 0.0)
+                                             + t0 - ready)
+                last_tenant_on_unit[key] = meta.tenant
                 dur = _duration(i, result, platform)
                 if i in startup_idx:
                     dur += platform.startup_s
@@ -139,4 +178,35 @@ def simulate(result: CodegenResult, platform: DoraPlatform) -> SimReport:
         else:
             stalled_rounds = 0
 
-    return SimReport(max(end), start, end, unit_busy, layer_ready)
+    report = SimReport(max(end), start, end, unit_busy, layer_ready)
+    if result.tenant_of:
+        report.tenant_stats = _tenant_stats(result, end, layer_ready,
+                                            arrivals or {}, miu_wait)
+    return report
+
+
+def _tenant_stats(result: CodegenResult, end: list[float],
+                  layer_ready: dict[int, float],
+                  arrivals: dict[int, float],
+                  miu_wait: dict[int, float]) -> dict[int, TenantSimStats]:
+    stats: dict[int, TenantSimStats] = {}
+    instr_of: dict[int, list[int]] = {}
+    for i, m in enumerate(result.meta):
+        ti = m.tenant if m.tenant >= 0 else result.tenant_of.get(m.layer_id, -1)
+        if ti >= 0:
+            instr_of.setdefault(ti, []).append(i)
+    for ti, idxs in sorted(instr_of.items()):
+        arr = arrivals.get(ti, 0.0)
+        finish = max(end[i] for i in idxs)
+        done = sorted(layer_ready[lid] - arr
+                      for lid, owner in result.tenant_of.items()
+                      if owner == ti and lid in layer_ready)
+        if done:
+            tail = done[min(len(done) - 1, int(0.95 * (len(done) - 1) + 0.5))]
+        else:
+            tail = finish - arr
+        stats[ti] = TenantSimStats(
+            tenant=ti, arrival_s=arr, finish_s=finish,
+            makespan_s=finish - arr, tail_latency_s=tail,
+            miu_wait_s=miu_wait.get(ti, 0.0), n_instructions=len(idxs))
+    return stats

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 EPILOGUES = ("none", "bias", "gelu", "relu", "relu2", "silu",
              "bias_gelu", "bias_relu", "bias_relu2", "bias_silu")
 
@@ -152,7 +154,7 @@ def flex_gemm_pallas(a: jax.Array, b: jax.Array,
             scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(bounds, *operands)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 
 def _ssd_kernel(bounds_ref, x_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
                 *, chunk: int):
@@ -105,7 +107,7 @@ def ssd_pallas(x, a, b, c, *, chunk: int = 128, interpret: bool = False):
             scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(bounds, x, a, b, c)

@@ -1,0 +1,160 @@
+"""Optional-hypothesis compatibility shim.
+
+The offline test environment does not ship ``hypothesis`` and cannot
+install it, so the property tests import ``given``/``settings``/
+``strategies`` from here instead of from hypothesis directly.  When the
+real package is importable we simply re-export it; otherwise a small
+deterministic fallback runs each property test on a fixed, seeded
+sample of examples (seed derived from the test name, so failures
+reproduce run-to-run).  The fallback covers exactly the strategy
+surface this suite uses: integers, booleans, just, sampled_from, lists,
+tuples, one_of, builds, and .map/.flatmap chaining.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    import pytest
+
+    # Cap for the fallback: property tests ask for up to 200 examples,
+    # which the deterministic sampler trims for offline runtime.
+    MAX_EXAMPLES_CAP = 50
+
+    class HealthCheck:  # noqa: D401 - attribute-only stand-in
+        """Names used with ``suppress_health_check`` (all ignored)."""
+
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+        large_base_example = "large_base_example"
+
+    class _Strategy:
+        """A sampling function rng -> value, with map/flatmap chaining."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: random.Random):
+            return self._sample(rng)
+
+        def map(self, fn) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self._sample(rng)))
+
+        def flatmap(self, fn) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self._sample(rng)).example(rng))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**63 - 1) -> _Strategy:
+            def sample(rng):
+                r = rng.random()
+                if r < 0.05:
+                    return min_value
+                if r < 0.10:
+                    return max_value
+                return rng.randint(min_value, max_value)
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def just(value) -> _Strategy:
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            items = list(seq)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size=0, max_size=None) -> _Strategy:
+            hi = max_size if max_size is not None else min_size + 10
+
+            def sample(rng):
+                n = rng.randint(min_size, hi)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*strats: _Strategy) -> _Strategy:
+            return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def one_of(*strats: _Strategy) -> _Strategy:
+            return _Strategy(
+                lambda rng: strats[rng.randrange(len(strats))].example(rng))
+
+        @staticmethod
+        def builds(target, *arg_strats: _Strategy, **kw_strats: _Strategy
+                   ) -> _Strategy:
+            def sample(rng):
+                args = [s.example(rng) for s in arg_strats]
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                return target(*args, **kwargs)
+
+            return _Strategy(sample)
+
+    strategies = _Strategies()
+
+    class settings:
+        """Decorator + profile registry stand-in (profiles are no-ops)."""
+
+        def __init__(self, max_examples: int = 20, deadline=None,
+                     suppress_health_check=(), **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._hyp_settings = self
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, parent=None, **kwargs) -> None:
+            pass
+
+        @classmethod
+        def load_profile(cls, name) -> None:
+            pass
+
+    def given(*strats: _Strategy, **kw_strats: _Strategy):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):  # noqa: ANN002 - example args injected
+                # (pytest must not see fn's params as fixtures; see below)
+                cfg = (getattr(wrapper, "_hyp_settings", None)
+                       or getattr(fn, "_hyp_settings", None))
+                n = min(cfg.max_examples if cfg else 20, MAX_EXAMPLES_CAP)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    vals = tuple(s.example(rng) for s in strats)
+                    kvals = {k: s.example(rng) for k, s in kw_strats.items()}
+                    try:
+                        fn(*args, *vals, **kwargs, **kvals)
+                    except BaseException:
+                        print(f"\n_hyp_compat falsifying example "
+                              f"#{i + 1}/{n} for {fn.__qualname__}: "
+                              f"args={vals!r} kwargs={kvals!r}")
+                        raise
+
+            # functools.wraps copies __wrapped__, which would make pytest
+            # resolve the original parameters as fixtures — the example
+            # arguments are injected by this wrapper instead.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return pytest.mark.hypothesis(wrapper)
+
+        return decorate

@@ -1,11 +1,16 @@
 """Shared test config. NOTE: no XLA_FLAGS here — smoke tests and benches
 must see the real (single) CPU device; only launch/dryrun.py forces 512
-placeholder devices."""
+placeholder devices.
 
-from hypothesis import HealthCheck, settings
+``hypothesis`` is optional (offline policy): _hyp_compat re-exports the
+real package when available and otherwise provides a deterministic
+sampled-examples fallback, so the suite always collects and runs."""
 
-settings.register_profile(
-    "repro", deadline=None,
-    suppress_health_check=[HealthCheck.too_slow,
-                           HealthCheck.data_too_large])
-settings.load_profile("repro")
+from _hyp_compat import HAVE_HYPOTHESIS, HealthCheck, settings
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile(
+        "repro", deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("repro")

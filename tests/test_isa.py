@@ -2,7 +2,7 @@
 dispatch semantics."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro.core.isa import (Epilogue, Instruction, LMUBody, MIUBody,
                             MMUBody, OpType, Program, SFUBody, UnitKind,

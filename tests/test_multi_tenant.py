@@ -1,0 +1,214 @@
+"""Multi-tenant compilation path: merging, release times, joint
+scheduling across every engine, codegen tenant tagging, and the
+simulator's per-tenant report."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
+                        MultiTenantWorkload, NonLinear, Policy, mlp_graph)
+from repro.core.graph import WorkloadGraph
+
+PLAT = DoraPlatform.vck190()
+
+
+def _tenant_a() -> WorkloadGraph:
+    return mlp_graph("a", 128, [96, 128, 64], NonLinear.GELU)
+
+
+def _tenant_b() -> WorkloadGraph:
+    return mlp_graph("b", 64, [64, 96, 32], NonLinear.RELU)
+
+
+def _pair(arrival_b: float = 0.0, **kw) -> MultiTenantWorkload:
+    mt = MultiTenantWorkload("pair", **kw)
+    mt.add_tenant("ta", _tenant_a(), priority=2.0)
+    mt.add_tenant("tb", _tenant_b(), priority=1.0, arrival_s=arrival_b)
+    return mt
+
+
+# -------------------------------------------------------------------- merge
+
+def test_merge_namespaces_and_reindexes():
+    merged = _pair().merge()
+    g = merged.graph
+    g.validate()
+    assert len(g.layers) == 4            # 2 MM layers per tenant
+    assert {l.name for l in g.layers} == {"ta::fc0", "ta::fc1",
+                                          "tb::fc0", "tb::fc1"}
+    assert "ta::x" in g.inputs and "tb::x" in g.inputs
+    # deps never cross tenants
+    for l in g.layers:
+        for d in l.deps:
+            assert merged.tenant_of[d] == merged.tenant_of[l.id]
+    assert merged.layers_of(0) == [0, 1]
+    assert merged.layers_of(1) == [2, 3]
+
+
+def test_merge_rejects_duplicates_and_bad_params():
+    mt = MultiTenantWorkload("x")
+    mt.add_tenant("t", _tenant_a())
+    with pytest.raises(ValueError):
+        mt.add_tenant("t", _tenant_b())
+    with pytest.raises(ValueError):
+        mt.add_tenant("u", _tenant_b(), priority=0.0)
+    with pytest.raises(ValueError):
+        mt.add_tenant("v", _tenant_b(), arrival_s=-1.0)
+    with pytest.raises(ValueError):
+        MultiTenantWorkload("empty").merge()
+
+
+def test_priority_orders_ready_layers():
+    merged = _pair().merge()
+    # ta has priority 2, tb priority 1: ta's layer k outranks tb's
+    assert merged.priorities[0] < merged.priorities[2]
+    assert merged.priorities[1] < merged.priorities[3]
+
+
+# ---------------------------------------------------------- joint schedules
+
+def _solo_makespan(g: WorkloadGraph, engine: str = "list") -> float:
+    comp = DoraCompiler(PLAT, Policy.dora())
+    return comp.compile(g, CompileOptions(engine=engine)).makespan_s
+
+
+def test_joint_schedule_valid_and_bounded_list_engine():
+    """The tentpole acceptance triple (list engine): joint schedule
+    passes precedence + unit-exclusivity validation; each tenant's
+    makespan is >= its solo makespan (co-residency never helps); the
+    joint makespan is <= the sum of solo makespans (co-scheduling never
+    loses to running the tenants back-to-back)."""
+    mt = _pair()
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(mt, CompileOptions(engine="list"))
+    merged = mt.merge()
+    # precedence + unit exclusivity + release times (raises on violation)
+    res.schedule.validate(merged.graph, PLAT, release=merged.release)
+
+    solo = {"ta": _solo_makespan(_tenant_a()),
+            "tb": _solo_makespan(_tenant_b())}
+    per_tenant = res.per_tenant_makespan()
+    for name in ("ta", "tb"):
+        assert per_tenant[name] >= solo[name] - 1e-12, (
+            name, per_tenant[name], solo[name])
+    assert res.makespan_s <= solo["ta"] + solo["tb"] + 1e-12
+
+
+@pytest.mark.parametrize("engine", ["milp", "ga", "list", "sequential"])
+def test_all_engines_route_multi_tenant(engine):
+    mt = _pair(arrival_b=0.2e-3)
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(mt, CompileOptions(engine=engine, time_budget_s=2.0))
+    merged = mt.merge()
+    res.schedule.validate(merged.graph, PLAT, release=merged.release)
+    # arrival offset respected: none of tb's layers start before 0.2 ms
+    by_layer = res.schedule.by_layer()
+    for lid in merged.layers_of(1):
+        assert by_layer[lid].start >= 0.2e-3 - 1e-12
+
+
+def test_future_arrival_does_not_starve_arrived_tenant():
+    """Regression: the SGS must not place a not-yet-arrived tenant's
+    layer ahead of arrived work — the serial unit pools would wall off
+    the idle window before its release and inflate the arrived
+    tenant's makespan by orders of magnitude."""
+    comp = DoraCompiler(PLAT, Policy.dora())
+    chain = mlp_graph("a", 64, [48, 48, 48, 48, 48])
+    solo = comp.compile(chain, CompileOptions(engine="list")).makespan_s
+    mt = MultiTenantWorkload("starve")
+    mt.add_tenant("early", mlp_graph("a", 64, [48, 48, 48, 48, 48]))
+    mt.add_tenant("late", mlp_graph("b", 64, [48, 48]),
+                  priority=100.0, arrival_s=0.01)
+    res = comp.compile(mt, CompileOptions(engine="list"))
+    assert res.per_tenant_makespan()["early"] <= solo * 1.5 + 1e-12
+
+
+def test_release_violation_caught_by_validate():
+    mt = _pair(arrival_b=1.0e-3)
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(mt, CompileOptions(engine="list"))
+    merged = mt.merge()
+    bad = {lid: 2.0e-3 for lid in merged.release}   # pretend later arrival
+    with pytest.raises(ValueError, match="release"):
+        res.schedule.validate(merged.graph, PLAT, release=bad)
+
+
+def test_partitioned_dse_rejects_arrival_offsets():
+    mt = _pair(arrival_b=1.0e-3)
+    comp = DoraCompiler(PLAT, Policy.dora())
+    with pytest.raises(ValueError, match="n_segments"):
+        comp.compile(mt, CompileOptions(engine="milp", n_segments=2))
+
+
+def test_mmu_cap_limits_modes():
+    mt = _pair(mmu_cap=2)
+    res = DoraCompiler(PLAT, Policy.dora()).compile(
+        mt, CompileOptions(engine="list"))
+    assert all(c.n_mmu <= 2 for cands in res.candidates.values()
+               for c in cands)
+    assert all(len(e.mmu_ids) <= 2 for e in res.schedule.entries)
+
+
+# ------------------------------------------------------- codegen + runtime
+
+def test_codegen_tenant_tags_and_numerics():
+    mt = _pair()
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(mt, CompileOptions(engine="list"))
+    merged = mt.merge()
+    # every layer-owned instruction carries its tenant tag
+    for m in res.codegen.meta:
+        if m.layer_id >= 0:
+            assert m.tenant == merged.tenant_of[m.layer_id]
+    assert res.codegen.tenant_of == merged.tenant_of
+    # joint instruction stream computes both tenants' numerics exactly
+    inputs = merged.graph.random_inputs(0)
+    ref = merged.graph.reference_execute(inputs)
+    out = comp.execute(res, inputs)
+    for l in merged.graph.layers:
+        np.testing.assert_allclose(out[l.name], ref[l.name],
+                                   rtol=2e-3, atol=2e-3, err_msg=l.name)
+
+
+# ------------------------------------------------------------- simulation
+
+def test_simulator_per_tenant_stats():
+    mt = _pair(arrival_b=0.1e-3)
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(mt, CompileOptions(engine="list"))
+    rep = comp.simulate(res)
+    assert set(rep.tenant_stats) == {0, 1}
+    for ti, s in rep.tenant_stats.items():
+        assert s.makespan_s > 0
+        assert 0 < s.tail_latency_s <= s.makespan_s + 1e-12
+        assert s.miu_wait_s >= 0.0
+        assert s.n_instructions > 0
+    # tb arrives at 0.1 ms: its instructions never start earlier
+    tb = rep.tenant_stats[1]
+    assert tb.arrival_s == pytest.approx(0.1e-3)
+    assert tb.finish_s >= tb.arrival_s
+    for i, m in enumerate(res.codegen.meta):
+        if m.tenant == 1:
+            assert rep.instr_start[i] >= 0.1e-3 - 1e-12
+
+
+def test_simulator_reports_cross_tenant_interference():
+    """Two memory-heavy tenants arriving together must contend on the
+    single MIU: at least one of them observes cross-tenant wait."""
+    mt = MultiTenantWorkload("contend")
+    mt.add_tenant("m0", mlp_graph("m0", 512, [512, 512, 512]))
+    mt.add_tenant("m1", mlp_graph("m1", 512, [512, 512, 512]))
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(mt, CompileOptions(engine="list"))
+    rep = comp.simulate(res)
+    total_wait = sum(s.miu_wait_s for s in rep.tenant_stats.values())
+    assert total_wait > 0.0
+
+
+def test_single_tenant_report_has_no_tenant_stats():
+    g = _tenant_a()
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(g, CompileOptions(engine="list"))
+    rep = comp.simulate(res)
+    assert rep.tenant_stats == {}
+    assert res.per_tenant_makespan() == {"a": res.makespan_s}

@@ -2,7 +2,7 @@
 claims (Fig. 10)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro.core.graph import Layer, LayerKind, NonLinear
 from repro.core.perf_model import (DoraPlatform, Policy, TilePlan,

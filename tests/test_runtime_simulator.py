@@ -4,7 +4,7 @@ vs the schedule, (c) ready-list RAW synchronization."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
                         NonLinear, OpType, Policy, Program, mlp_graph,

@@ -5,7 +5,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro.core import (DoraPlatform, GAConfig, GAScheduler, MilpScheduler,
                         Policy, build_candidate_table, list_schedule,

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro import checkpoint as ckpt
 from repro.data import DataConfig, SyntheticLM
