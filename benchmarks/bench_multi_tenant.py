@@ -18,15 +18,25 @@ cross-tenant overlap, but the single in-order MIU stream gives most of
 it back as head-of-line blocking — visible as per-tenant
 ``miu_wait_s`` (cross-tenant interference).
 
+The ``vc_sweep`` rows quantify how much of that schedule-vs-simulator
+gap the virtual-channel subsystem recovers: the joint program is
+tile-interleaved (``interleave="rr"``) and simulated with
+``vc_count`` in {1, 2, 4} MIU virtual channels (rr arbitration);
+``recovered_gap_frac`` is (base - vc makespan) / (base - schedule
+makespan), i.e. the fraction of the head-of-line-blocking loss won back
+(>1 means the simulator beat the analytic schedule bound).
+
 Usage: PYTHONPATH=src python benchmarks/bench_multi_tenant.py
+       PYTHONPATH=src python benchmarks/bench_multi_tenant.py --vc 4
    or: PYTHONPATH=src python -m benchmarks.run multi_tenant
 """
 
 from __future__ import annotations
 
-from repro.configs import paper_models
 from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
-                        MultiTenantWorkload, Policy)
+                        MultiTenantWorkload, Policy, interleave_stream,
+                        simulate)
+from repro.configs import paper_models
 
 PLAT = DoraPlatform.vck190()
 
@@ -46,6 +56,26 @@ SCENARIOS = {
 
 
 _SOLO_CACHE: dict[str, tuple[dict[str, float], dict[str, float]]] = {}
+_JOINT_CACHE: dict[tuple, tuple] = {}
+
+
+def _joint_compile(scenario: str, priority: dict[str, float] | None = None,
+                   arrival_s: dict[str, float] | None = None):
+    """(workload, CompileResult) for the joint list-engine compile —
+    cached, since run() and vc_sweep() need the same (expensive) joint
+    problem and only vary priority/arrival."""
+    key = (scenario, tuple(sorted((priority or {}).items())),
+           tuple(sorted((arrival_s or {}).items())))
+    if key not in _JOINT_CACHE:
+        mt = MultiTenantWorkload(scenario)
+        for name, g in SCENARIOS[scenario]().items():
+            mt.add_tenant(name, g,
+                          priority=(priority or {}).get(name, 1.0),
+                          arrival_s=(arrival_s or {}).get(name, 0.0))
+        comp = DoraCompiler(PLAT, Policy.dora())
+        _JOINT_CACHE[key] = (mt, comp.compile(mt,
+                                              CompileOptions(engine="list")))
+    return _JOINT_CACHE[key]
 
 
 def _solo_baseline(scenario: str, graphs) -> tuple[dict[str, float],
@@ -68,15 +98,8 @@ def _solo_baseline(scenario: str, graphs) -> tuple[dict[str, float],
 def run(scenario: str, priority: dict[str, float] | None = None,
         arrival_s: dict[str, float] | None = None) -> dict:
     comp = DoraCompiler(PLAT, Policy.dora())
-    graphs = SCENARIOS[scenario]()
-    solo_sched, solo_sim = _solo_baseline(scenario, graphs)
-
-    mt = MultiTenantWorkload(scenario)
-    for name, g in graphs.items():
-        mt.add_tenant(name, g,
-                      priority=(priority or {}).get(name, 1.0),
-                      arrival_s=(arrival_s or {}).get(name, 0.0))
-    res = comp.compile(mt, CompileOptions(engine="list"))
+    solo_sched, solo_sim = _solo_baseline(scenario, SCENARIOS[scenario]())
+    mt, res = _joint_compile(scenario, priority, arrival_s)
     rep = comp.simulate(res)
 
     row = {
@@ -96,6 +119,35 @@ def run(scenario: str, priority: dict[str, float] | None = None,
             "slowdown_vs_solo": s.makespan_s / solo_sim[t.name],
         }
     return row
+
+
+def vc_sweep(scenario: str, vcs: tuple[int, ...] = (1, 2, 4),
+             arbitration: str = "rr") -> dict:
+    """Joint makespan vs MIU virtual-channel count, on the
+    tile-interleaved joint program.  One (cached) compile, N cheap
+    simulations; ``base_sim_s`` is today's machine (contiguous stream,
+    vc=1)."""
+    mt, res = _joint_compile(scenario)
+    arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
+    prios = {ti: t.priority for ti, t in enumerate(mt.tenants)}
+    ilv = interleave_stream(res.codegen, policy="rr", priorities=prios)
+
+    out = {
+        "sched_s": res.makespan_s,
+        "base_sim_s": simulate(res.codegen, PLAT,
+                               arrivals=arrivals).makespan_s,
+        "vc": {},
+    }
+    gap = out["base_sim_s"] - out["sched_s"]
+    for v in vcs:
+        mk = simulate(ilv, PLAT.with_vc(v, arbitration),
+                      arrivals=arrivals, priorities=prios).makespan_s
+        out["vc"][v] = {
+            "joint_sim_s": mk,
+            "recovered_gap_frac": (out["base_sim_s"] - mk) / gap
+            if gap > 0 else 0.0,
+        }
+    return out
 
 
 def main(emit) -> None:
@@ -128,8 +180,29 @@ def main(emit) -> None:
          offs["joint_sim_s"],
          "whisper-medium arrives at 50% of qwen3-4b solo makespan")
 
+    # virtual-channel sweep: interleaved stream, vc_count in {1, 2, 4}
+    for scenario in SCENARIOS:
+        emit_vc_sweep(emit, scenario, vc_sweep(scenario))
+
+
+def emit_vc_sweep(emit, scenario: str, sw: dict) -> None:
+    pre = f"multi_tenant.{scenario}"
+    emit(f"{pre}.vc_sweep.base_joint_makespan_s", sw["base_sim_s"],
+         f"contiguous stream, vc=1 (sched bound={sw['sched_s']:.6g})")
+    for v, row in sw["vc"].items():
+        emit(f"{pre}.vc{v}.joint_makespan_s", row["joint_sim_s"],
+             f"tile-interleaved rr, {v} MIU VC; recovered_gap_frac="
+             f"{row['recovered_gap_frac']:.3f}")
+
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--vc", type=int, default=None, metavar="N",
+                    help="only run the virtual-channel sweep with "
+                         "vc_count in {1, N} (default: full benchmark)")
+    args = ap.parse_args()
     print("name,value,derived")
 
     def _emit(name, value, derived=""):
@@ -137,4 +210,9 @@ if __name__ == "__main__":
             value = f"{value:.6g}"
         print(f"{name},{value},{derived}")
 
-    main(_emit)
+    if args.vc is not None:
+        vcs = (1, args.vc) if args.vc != 1 else (1,)
+        for scenario in SCENARIOS:
+            emit_vc_sweep(_emit, scenario, vc_sweep(scenario, vcs=vcs))
+    else:
+        main(_emit)

@@ -6,6 +6,8 @@ from .codegen import CodegenResult, MemoryMap, generate
 from .compiler import CompileOptions, CompileResult, DoraCompiler
 from .ga import GAConfig, GAResult, GAScheduler
 from .graph import Layer, LayerKind, NonLinear, WorkloadGraph, mlp_graph, random_dag
+from .interleave import (apply_permutation, interleave_stream,
+                         plan_interleave, validate_stream)
 from .isa import (Epilogue, Instruction, LMUBody, LmuRole, MIUBody, MMUBody,
                   OpType, Program, SFUBody, UnitKind, disassemble, mk)
 from .milp import MilpScheduler, SolveResult

@@ -20,6 +20,10 @@ binary is functionally correct (runtime.py), while the side-table
 ``meta`` carries the true dataflow dependencies + byte/cycle weights for
 the *parallel* event-driven timing simulation (simulator.py). The binary
 itself is self-contained; meta is derived information only.
+
+The emission order (and the full ISA) is documented in docs/ISA.md;
+``interleave.py`` may permute the stream at tile granularity afterwards
+(see the ``interleave`` argument to :func:`generate`).
 """
 
 from __future__ import annotations
@@ -88,7 +92,18 @@ class CodegenResult:
 
 def generate(graph: WorkloadGraph, schedule: Schedule,
              platform: DoraPlatform,
-             tenant_of: dict[int, int] | None = None) -> CodegenResult:
+             tenant_of: dict[int, int] | None = None,
+             interleave: str = "none",
+             interleave_priorities: dict[int, float] | None = None
+             ) -> CodegenResult:
+    """Lower ``schedule`` to the flat DORA instruction stream.
+
+    ``interleave``: post-pass re-ordering the stream at tile granularity
+    ("none" | "rr" | "priority", see ``interleave.interleave_stream``) so
+    per-tenant/per-layer MIU traffic alternates instead of arriving one
+    full tile loop at a time.  ``interleave_priorities`` weights the
+    priority policy's channels (tenant index -> weight for multi-tenant
+    programs, layer id -> weight otherwise)."""
     memmap = MemoryMap()
     for name, (r, c) in graph.inputs.items():
         memmap.alloc(name, r, c, platform.dtype_bytes)
@@ -271,8 +286,13 @@ def generate(graph: WorkloadGraph, schedule: Schedule,
                              g_out, g_nl, sfu_id, ready_store)
 
     _finalize_is_last(program)
-    return CodegenResult(program, memmap, meta, ready_store,
-                         dict(tenant_of or {}))
+    result = CodegenResult(program, memmap, meta, ready_store,
+                           dict(tenant_of or {}))
+    if interleave != "none":
+        from .interleave import interleave_stream
+        result = interleave_stream(result, policy=interleave,
+                                   priorities=interleave_priorities)
+    return result
 
 
 def _emit_streamed_nl(layer, entry, memmap, platform, emit, dep_ids,

@@ -18,6 +18,7 @@ import numpy as np
 from .codegen import CodegenResult, generate
 from .ga import GAConfig, GAResult, GAScheduler
 from .graph import WorkloadGraph
+from .interleave import POLICIES as INTERLEAVE_POLICIES
 from .milp import MilpScheduler, SolveResult
 from .multi_tenant import MultiTenantWorkload
 from .partition import partitioned_solve
@@ -34,6 +35,10 @@ class CompileOptions:
     n_segments: int = 1           # DAG-partitioned DSE (paper §4.4)
     time_budget_s: float = 10.0
     ga: GAConfig = field(default_factory=GAConfig)
+    # tile-granularity MIU interleave pass applied after codegen:
+    # "none" | "rr" | "priority"; None defers to the workload's own
+    # ``MultiTenantWorkload.interleave`` setting ("none" single-tenant).
+    interleave: str | None = None
 
 
 @dataclass
@@ -105,6 +110,14 @@ class DoraCompiler:
             mmu_cap = None
             mt_workload = None
         graph.validate()
+        # resolve + validate the interleave policy *before* the expensive
+        # DSE stages so a typo'd knob fails fast
+        ilv = options.interleave
+        if ilv is None:
+            ilv = mt_workload.interleave if mt_workload is not None else "none"
+        if ilv not in INTERLEAVE_POLICIES:
+            raise ValueError(f"unknown interleave policy {ilv!r}; "
+                             f"expected one of {INTERLEAVE_POLICIES}")
 
         t0 = time.perf_counter()
         candidates = build_candidate_table(graph, self.platform, self.policy,
@@ -153,7 +166,12 @@ class DoraCompiler:
         t2 = time.perf_counter()
 
         schedule.validate(graph, self.platform, release=release)
-        cg = generate(graph, schedule, self.platform, tenant_of=tenant_of)
+        ilv_prios = None
+        if mt_workload is not None:
+            ilv_prios = {ti: t.priority
+                         for ti, t in enumerate(mt_workload.tenants)}
+        cg = generate(graph, schedule, self.platform, tenant_of=tenant_of,
+                      interleave=ilv, interleave_priorities=ilv_prios)
         t3 = time.perf_counter()
 
         return CompileResult(graph, self.platform, self.policy, candidates,
@@ -171,7 +189,11 @@ class DoraCompiler:
 
     def simulate(self, result: CompileResult) -> SimReport:
         arrivals = None
+        priorities = None
         if result.workload is not None:
             arrivals = {ti: t.arrival_s
                         for ti, t in enumerate(result.workload.tenants)}
-        return simulate(result.codegen, self.platform, arrivals=arrivals)
+            priorities = {ti: t.priority
+                          for ti, t in enumerate(result.workload.tenants)}
+        return simulate(result.codegen, self.platform, arrivals=arrivals,
+                        priorities=priorities)

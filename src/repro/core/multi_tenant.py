@@ -34,6 +34,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .graph import Layer, WorkloadGraph
+from .interleave import POLICIES as INTERLEAVE_POLICIES
 
 TENANT_SEP = "::"
 
@@ -70,11 +71,19 @@ class MultiTenantWorkload:
     ``mmu_cap`` is the fairness knob: the per-layer ceiling on MMUs any
     single candidate mode may claim (None = a layer may still take the
     whole array when it is alone).
+
+    ``interleave`` is the MIU traffic-shaping knob: the tile-granularity
+    codegen pass ("none" | "rr" | "priority") that alternates the
+    tenants' MIU instruction streams instead of emitting each layer's
+    full tile loop contiguously — the codegen half of the virtual-channel
+    subsystem ("priority" weights channels by tenant priority).  A
+    ``CompileOptions.interleave`` value overrides it per compile.
     """
 
     name: str
     tenants: list[TenantSpec] = field(default_factory=list)
     mmu_cap: int | None = None
+    interleave: str = "none"
 
     def add_tenant(self, name: str, graph: WorkloadGraph,
                    priority: float = 1.0,
@@ -92,6 +101,9 @@ class MultiTenantWorkload:
     def merge(self) -> MergedWorkload:
         if not self.tenants:
             raise ValueError(f"{self.name}: no tenants to merge")
+        if self.interleave not in INTERLEAVE_POLICIES:
+            raise ValueError(f"{self.name}: unknown interleave policy "
+                             f"{self.interleave!r}")
         joint = WorkloadGraph(self.name)
         tenant_of: dict[int, int] = {}
         release: dict[int, float] = {}

@@ -39,6 +39,10 @@ def round_up(a: int, b: int) -> int:
 # Platform
 # ---------------------------------------------------------------------------
 
+# MIU virtual-channel arbitration policies (see simulator._simulate_vc)
+VC_ARBITRATIONS = ("fifo", "rr", "priority")
+
+
 @dataclass(frozen=True)
 class DoraPlatform:
     """The DORA machine template (paper §3.7 / §6: 6 MMUs of 4x4x4 AIE
@@ -63,6 +67,20 @@ class DoraPlatform:
     sync_overhead_s: float = 2.0e-6   # per on-chip iteration handshake
     startup_s: float = 10.0e-6        # per-layer instruction fetch/dispatch
     dtype_bytes: int = 4              # fp32 prototype
+    # MIU virtual channels (simulator): number of per-tenant (or
+    # per-layer-group) channels the physical MIU arbitrates between.
+    # 1 = today's single in-order stream; the head of a blocked channel
+    # never stalls ready traffic on another channel when vc_count > 1.
+    vc_count: int = 1
+    vc_arbitration: str = "fifo"      # fifo | rr | priority
+
+    def __post_init__(self) -> None:
+        if self.vc_count < 1:
+            raise ValueError(f"vc_count must be >= 1, got {self.vc_count}")
+        if self.vc_arbitration not in VC_ARBITRATIONS:
+            raise ValueError(
+                f"unknown vc_arbitration {self.vc_arbitration!r}; "
+                f"expected one of {VC_ARBITRATIONS}")
 
     @property
     def pes_per_mmu(self) -> int:
@@ -77,6 +95,13 @@ class DoraPlatform:
     @classmethod
     def vck190(cls) -> "DoraPlatform":
         return cls()
+
+    def with_vc(self, vc_count: int, arbitration: str = "rr"
+                ) -> "DoraPlatform":
+        """Same platform with ``vc_count`` MIU virtual channels under the
+        given arbitration policy (fifo | rr | priority); both values are
+        validated by ``__post_init__``."""
+        return replace(self, vc_count=vc_count, vc_arbitration=arbitration)
 
     @classmethod
     def tpu_v5e(cls) -> "DoraPlatform":

@@ -2,7 +2,7 @@
 Fig. 5 / Fig. 8d).
 
 Models, at instruction granularity:
-  - the single MIU serializing DRAM traffic at ``dram_bw_bytes``;
+  - the MIU serializing DRAM traffic at ``dram_bw_bytes``;
   - the Sync Unit's Ready List Table: MIU LOADs with a ``deps`` list
     block until every dependency layer's final STORE has drained (§3.4);
   - stream back-pressure: a consumer instruction cannot start before its
@@ -18,8 +18,29 @@ Multi-tenant extension: when codegen tagged instructions with tenants,
 ``simulate`` additionally (a) holds every tenant's instructions until
 that tenant's arrival time, and (b) reports per-tenant makespan, tail
 latency (p95 of layer completion), and cross-tenant interference — the
-time a tenant's MIU transfers spent queued behind *other* tenants'
-traffic on the single shared MIU.
+time a tenant's MIU transfers spent queued while *other* tenants'
+traffic occupied (or head-blocked) the shared MIU.
+
+MIU virtual channels (``DoraPlatform.vc_count > 1``): each physical
+MIU's queue splits into per-tenant (or per-layer-group, for untagged
+programs) virtual channels.  Every channel stays in order internally,
+but a channel head blocked on the ready list or on stream back-pressure
+no longer stalls ready traffic queued on the other channels — the MIU
+arbitrates among ready channel heads:
+
+  fifo     — serve the ready head with the lowest program (IDU fetch)
+             index; with vc_count=1 this is bit-for-bit the single
+             in-order stream (the pre-VC behaviour).
+  rr       — rotate across channels with ready heads.
+  priority — serve the ready head of the highest-weight channel
+             (weights from the ``priorities`` argument, e.g. tenant
+             priorities; work-conserving: an absent channel never
+             reserves bandwidth).
+
+All policies are work-conserving and deterministic; arbitration only
+chooses among heads that are ready at the earliest possible service
+time, so adding channels can only remove head-of-line blocking, never
+add idle time.
 """
 
 from __future__ import annotations
@@ -29,6 +50,8 @@ from dataclasses import dataclass, field
 from .codegen import CodegenResult
 from .isa import OpType, UnitKind
 from .perf_model import DoraPlatform
+
+_MIU_OPS = (OpType.MIU_LOAD, OpType.MIU_STORE)
 
 
 @dataclass
@@ -82,107 +105,302 @@ def _duration(i: int, result: CodegenResult,
     return 0.0
 
 
-def simulate(result: CodegenResult, platform: DoraPlatform,
-             arrivals: dict[int, float] | None = None) -> SimReport:
-    """``arrivals``: tenant index -> arrival time; instructions of a
-    tenant never start before it arrives (multi-tenant runs only)."""
-    prog = result.program
-    n = len(prog)
-    start = [-1.0] * n
-    end = [-1.0] * n
-    unit_free: dict[tuple[UnitKind, int], float] = {}
-    unit_busy: dict[tuple[UnitKind, int], float] = {}
-    layer_ready: dict[int, float] = {}
-    # cross-tenant MIU interference accounting
-    last_tenant_on_unit: dict[tuple[UnitKind, int], int] = {}
-    miu_wait: dict[int, float] = {}
+class _SimState:
+    """Shared per-simulation state: issue bookkeeping used identically by
+    the in-order path and the virtual-channel path (so vc_count=1 + fifo
+    reproduces the in-order timings bit-for-bit)."""
 
+    def __init__(self, result: CodegenResult, platform: DoraPlatform,
+                 arrivals: dict[int, float] | None):
+        self.result = result
+        self.platform = platform
+        self.arrivals = arrivals
+        n = len(result.program)
+        self.n = n
+        self.start = [-1.0] * n
+        self.end = [-1.0] * n
+        self.unit_free: dict[tuple[UnitKind, int], float] = {}
+        self.unit_busy: dict[tuple[UnitKind, int], float] = {}
+        self.layer_ready: dict[int, float] = {}
+        self.miu_wait: dict[int, float] = {}
+        # per-MIU occupancy history in service order, as prefix sums so
+        # each wait query is O(log n): interval k's *span* is
+        # (end_k - end_{k-1}), i.e. its busy time plus the idle gap
+        # before it (attributed to its tenant: the head that sat blocked
+        # during the gap).
+        self._occ_ends: dict[tuple[UnitKind, int], list[float]] = {}
+        self._occ_tenant: dict[tuple[UnitKind, int], list[int]] = {}
+        self._occ_cum: dict[tuple[UnitKind, int], list[float]] = {}
+        self._occ_cum_own: dict[tuple[UnitKind, int],
+                                dict[int, list[float]]] = {}
+        self._tenants = sorted({m.tenant for m in result.meta
+                                if m.tenant >= 0})
+        # per-layer instruction fetch/dispatch cost (IDU startup, §3.6):
+        # charged on the first instruction of each layer in stream order.
+        startup_of: dict[int, int] = {}
+        for i, m in enumerate(result.meta):
+            if m.layer_id >= 0 and m.layer_id not in startup_of:
+                startup_of[m.layer_id] = i
+        self.startup_idx = set(startup_of.values())
+
+    def ready_time(self, i: int) -> float | None:
+        """Earliest time instruction ``i`` may start, ignoring unit
+        occupancy — or None while some producer is still unsimulated."""
+        meta = self.result.meta[i]
+        instr = self.result.program.instructions[i]
+        dep_times = []
+        for d in meta.deps:
+            if self.end[d] < 0:
+                return None
+            dep_times.append(self.end[d])
+        # ready-list RAW sync for MIU LOAD deps
+        if instr.op_type == OpType.MIU_LOAD and instr.body.deps:
+            for lid in instr.body.deps:
+                rs = self.result.ready_store.get(lid)
+                if rs is not None:
+                    if self.end[rs] < 0:
+                        return None
+                    dep_times.append(self.end[rs])
+        if self.arrivals and meta.tenant >= 0:
+            dep_times.append(self.arrivals.get(meta.tenant, 0.0))
+        return max(dep_times, default=0.0)
+
+    def issue(self, i: int, key: tuple[UnitKind, int], ready: float) -> None:
+        instr = self.result.program.instructions[i]
+        meta = self.result.meta[i]
+        t0 = max(self.unit_free.get(key, 0.0), ready)
+        # cross-tenant interference: attribute the queued window
+        # [ready, t0) to the occupancy intervals that actually blocked it
+        if (instr.op_type in _MIU_OPS and meta.tenant >= 0 and t0 > ready):
+            w = self._foreign_occupancy(key, ready, t0, meta.tenant)
+            if w > 0.0:
+                self.miu_wait[meta.tenant] = (
+                    self.miu_wait.get(meta.tenant, 0.0) + w)
+        dur = _duration(i, self.result, self.platform)
+        if i in self.startup_idx:
+            dur += self.platform.startup_s
+        self.start[i] = t0
+        self.end[i] = t0 + dur
+        self.unit_free[key] = self.end[i]
+        self.unit_busy[key] = self.unit_busy.get(key, 0.0) + dur
+        if instr.op_type in _MIU_OPS:
+            ends = self._occ_ends.setdefault(key, [])
+            span = self.end[i] - (ends[-1] if ends else 0.0)
+            cum = self._occ_cum.setdefault(key, [])
+            cum.append((cum[-1] if cum else 0.0) + span)
+            own = self._occ_cum_own.setdefault(
+                key, {t: [] for t in self._tenants})
+            for t, lst in own.items():
+                lst.append((lst[-1] if lst else 0.0)
+                           + (span if t == meta.tenant else 0.0))
+            ends.append(self.end[i])
+            self._occ_tenant.setdefault(key, []).append(meta.tenant)
+        if instr.op_type == OpType.MIU_STORE:
+            rs = self.result.ready_store.get(meta.layer_id)
+            if rs == i:
+                self.layer_ready[meta.layer_id] = self.end[i]
+
+    def _foreign_occupancy(self, key: tuple[UnitKind, int], w0: float,
+                           w1: float, tenant: int) -> float:
+        """Time within the queued window [w0, w1) during which the MIU
+        was occupied by (or head-blocked on) another tenant's transfer.
+
+        The previous accounting charged the whole wait iff the
+        *immediately preceding* instruction on the unit belonged to a
+        different tenant — undercounting whenever one of the tenant's own
+        short transfers ran in the middle of a long foreign queue, and
+        overcounting self-inflicted queueing behind the tenant's own
+        traffic.  Here each busy interval in the window is attributed to
+        the tenant that held the MIU, and each idle gap to the tenant of
+        the *next* serviced transfer (the head that sat blocked during
+        the gap).
+
+        The query window always ends at the unit's current free time
+        (``w1 == unit_free``, the end of the last recorded interval), so
+        foreign time = (foreign span suffix from the interval covering
+        w0) minus the part of that interval's span before w0."""
+        ends = self._occ_ends.get(key)
+        if not ends:
+            return 0.0
+        lo, hi = 0, len(ends)
+        while lo < hi:                       # first interval ending > w0
+            mid = (lo + hi) // 2
+            if ends[mid] <= w0:
+                lo = mid + 1
+            else:
+                hi = mid
+        if lo == len(ends):
+            return 0.0
+        cum = self._occ_cum[key]
+        own = self._occ_cum_own[key].get(tenant)
+        foreign = cum[-1] - (own[-1] if own else 0.0)
+        if lo > 0:
+            foreign -= cum[lo - 1] - (own[lo - 1] if own else 0.0)
+        if self._occ_tenant[key][lo] != tenant:
+            # interval lo's span starts at the previous interval's end;
+            # the slice [span start, w0) lies outside the window
+            foreign -= w0 - (ends[lo - 1] if lo > 0 else 0.0)
+        return max(foreign, 0.0)
+
+    def report(self) -> SimReport:
+        report = SimReport(max(self.end), self.start, self.end,
+                           self.unit_busy, self.layer_ready)
+        if self.result.tenant_of:
+            report.tenant_stats = _tenant_stats(
+                self.result, self.end, self.layer_ready,
+                self.arrivals or {}, self.miu_wait)
+        return report
+
+
+def simulate(result: CodegenResult, platform: DoraPlatform,
+             arrivals: dict[int, float] | None = None,
+             priorities: dict[int, float] | None = None) -> SimReport:
+    """``arrivals``: tenant index -> arrival time; instructions of a
+    tenant never start before it arrives (multi-tenant runs only).
+    ``priorities``: tenant index -> weight, consumed by the ``priority``
+    virtual-channel arbitration (ignored otherwise)."""
+    if platform.vc_count > 1:
+        return _simulate_vc(result, platform, arrivals, priorities)
+    return _simulate_inorder(result, platform, arrivals)
+
+
+def _simulate_inorder(result: CodegenResult, platform: DoraPlatform,
+                      arrivals: dict[int, float] | None) -> SimReport:
+    """The single-stream machine: every unit (including the MIU) drains
+    its queue strictly in program order."""
+    st = _SimState(result, platform, arrivals)
     # per-unit queues in program (IDU-dispatch) order
     queues: dict[tuple[UnitKind, int], list[int]] = {}
-    for i, instr in enumerate(prog.instructions):
+    for i, instr in enumerate(result.program.instructions):
         queues.setdefault((instr.unit_kind, instr.unit_index), []).append(i)
     heads = {k: 0 for k in queues}
 
-    # per-layer instruction fetch/dispatch cost (IDU startup, §3.6):
-    # charged on the first instruction of each layer.
-    startup_of: dict[int, int] = {}
-    for i, m in enumerate(result.meta):
-        if m.layer_id >= 0 and m.layer_id not in startup_of:
-            startup_of[m.layer_id] = i
-    startup_idx = set(startup_of.values())
-
     done = 0
     stalled_rounds = 0
+    n = st.n
     while done < n:
         progressed = False
         for key, q in queues.items():
             while heads[key] < len(q):
                 i = q[heads[key]]
-                meta = result.meta[i]
-                instr = prog.instructions[i]
-                # dataflow producers must have finished
-                dep_times = []
-                ok = True
-                for d in meta.deps:
-                    if end[d] < 0:
-                        ok = False
-                        break
-                    dep_times.append(end[d])
-                if not ok:
+                ready = st.ready_time(i)
+                if ready is None:
                     break
-                # ready-list RAW sync for MIU LOAD deps
-                if instr.op_type == OpType.MIU_LOAD and instr.body.deps:
-                    for lid in instr.body.deps:
-                        rs = result.ready_store.get(lid)
-                        if rs is not None:
-                            if end[rs] < 0:
-                                ok = False
-                                break
-                            dep_times.append(end[rs])
-                if not ok:
-                    break
-                if arrivals and meta.tenant >= 0:
-                    dep_times.append(arrivals.get(meta.tenant, 0.0))
-                ready = max(dep_times, default=0.0)
-                t0 = max(unit_free.get(key, 0.0), ready)
-                # time this transfer queued on the shared MIU behind a
-                # different tenant's traffic = cross-tenant interference
-                if (instr.op_type in (OpType.MIU_LOAD, OpType.MIU_STORE)
-                        and meta.tenant >= 0 and t0 > ready
-                        and last_tenant_on_unit.get(key, meta.tenant)
-                        != meta.tenant):
-                    miu_wait[meta.tenant] = (miu_wait.get(meta.tenant, 0.0)
-                                             + t0 - ready)
-                last_tenant_on_unit[key] = meta.tenant
-                dur = _duration(i, result, platform)
-                if i in startup_idx:
-                    dur += platform.startup_s
-                start[i] = t0
-                end[i] = t0 + dur
-                unit_free[key] = end[i]
-                unit_busy[key] = unit_busy.get(key, 0.0) + dur
-                if instr.op_type == OpType.MIU_STORE:
-                    rs = result.ready_store.get(meta.layer_id)
-                    if rs == i:
-                        layer_ready[meta.layer_id] = end[i]
+                st.issue(i, key, ready)
                 heads[key] += 1
                 done += 1
                 progressed = True
         if not progressed:
             stalled_rounds += 1
             if stalled_rounds > 2:
-                missing = [i for i in range(n) if end[i] < 0]
+                missing = [i for i in range(n) if st.end[i] < 0]
                 raise RuntimeError(
                     f"simulator deadlock: {len(missing)} instructions "
                     f"blocked, first = {missing[:5]}")
         else:
             stalled_rounds = 0
+    return st.report()
 
-    report = SimReport(max(end), start, end, unit_busy, layer_ready)
-    if result.tenant_of:
-        report.tenant_stats = _tenant_stats(result, end, layer_ready,
-                                            arrivals or {}, miu_wait)
-    return report
+
+def _simulate_vc(result: CodegenResult, platform: DoraPlatform,
+                 arrivals: dict[int, float] | None,
+                 priorities: dict[int, float] | None) -> SimReport:
+    """The arbitrated machine: MIU queues split into ``vc_count`` virtual
+    channels; every other unit stays strictly in order.
+
+    Each outer round first drains every in-order unit to a fixed point,
+    then commits exactly one MIU service per physical MIU.  Committing
+    only at drain fixed points keeps arbitration sound: any channel head
+    whose ready time is still unknown is transitively blocked on a
+    *future* MIU service, so it cannot become ready before the candidates
+    being compared."""
+    arb = platform.vc_arbitration      # validated by DoraPlatform
+    st = _SimState(result, platform, arrivals)
+    vc = platform.vc_count
+    priorities = priorities or {}
+
+    inorder: dict[tuple[UnitKind, int], list[int]] = {}
+    vcq: dict[tuple[UnitKind, int], dict[int, list[int]]] = {}
+    for i, instr in enumerate(result.program.instructions):
+        key = (instr.unit_kind, instr.unit_index)
+        if instr.unit_kind == UnitKind.MIU:
+            m = result.meta[i]
+            ch = (m.tenant if m.tenant >= 0 else max(m.layer_id, 0)) % vc
+            vcq.setdefault(key, {}).setdefault(ch, []).append(i)
+        else:
+            inorder.setdefault(key, []).append(i)
+    heads = {k: 0 for k in inorder}
+    vheads = {k: {c: 0 for c in q} for k, q in vcq.items()}
+    chan_list = {k: sorted(q) for k, q in vcq.items()}
+    rr_ptr = {k: 0 for k in vcq}
+    # channel weight = max priority among the tenants mapped into it
+    weight = {
+        k: {c: max((priorities.get(result.meta[i].tenant, 1.0)
+                    for i in idxs), default=1.0)
+            for c, idxs in q.items()}
+        for k, q in vcq.items()}
+
+    done = 0
+    n = st.n
+    while done < n:
+        progressed_any = False
+        # 1. drain the strictly in-order units to a fixed point
+        while True:
+            progressed = False
+            for key, q in inorder.items():
+                while heads[key] < len(q):
+                    i = q[heads[key]]
+                    ready = st.ready_time(i)
+                    if ready is None:
+                        break
+                    st.issue(i, key, ready)
+                    heads[key] += 1
+                    done += 1
+                    progressed = True
+            if not progressed:
+                break
+            progressed_any = True
+        # 2. one arbitration commit per physical MIU
+        for key, q in vcq.items():
+            cands = []    # (channel, instr idx, service start, ready)
+            for c in chan_list[key]:
+                h = vheads[key][c]
+                if h >= len(q[c]):
+                    continue
+                i = q[c][h]
+                ready = st.ready_time(i)
+                if ready is None:
+                    continue
+                cands.append((c, i, max(st.unit_free.get(key, 0.0), ready),
+                              ready))
+            if not cands:
+                continue
+            t_star = min(t for (_, _, t, _) in cands)
+            pool = [cd for cd in cands if cd[2] == t_star]
+            if arb == "fifo":
+                c, i, _, ready = min(pool, key=lambda cd: cd[1])
+            elif arb == "priority":
+                c, i, _, ready = max(
+                    pool, key=lambda cd: (weight[key][cd[0]], -cd[1]))
+            else:   # rr: next channel after the last grant wins
+                clist = chan_list[key]
+                by_chan = {cd[0]: cd for cd in pool}
+                for off in range(len(clist)):
+                    cc = clist[(rr_ptr[key] + off) % len(clist)]
+                    if cc in by_chan:
+                        c, i, _, ready = by_chan[cc]
+                        rr_ptr[key] = (clist.index(cc) + 1) % len(clist)
+                        break
+            st.issue(i, key, ready)
+            vheads[key][c] += 1
+            done += 1
+            progressed_any = True
+        if not progressed_any and done < n:
+            missing = [i for i in range(n) if st.end[i] < 0]
+            raise RuntimeError(
+                f"simulator deadlock (vc): {len(missing)} instructions "
+                f"blocked, first = {missing[:5]}")
+    return st.report()
 
 
 def _tenant_stats(result: CodegenResult, end: list[float],

@@ -1,0 +1,91 @@
+"""Docs-sync guard: docs/ISA.md is the enforced reference for
+``core/isa.py`` — every enum member and body field must be documented,
+and every opcode documented must exist — and docs/ARCHITECTURE.md must
+mention every core module.  This is what keeps the docs from rotting
+silently when the ISA or the pipeline changes."""
+
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.core.isa import (Body, Epilogue, LMUBody, LmuRole, MIUBody,
+                            MMUBody, OpType, SFUBody, UnitKind)
+
+pytestmark = pytest.mark.docs
+
+DOCS = Path(__file__).resolve().parents[1] / "docs"
+ISA_MD = DOCS / "ISA.md"
+ARCH_MD = DOCS / "ARCHITECTURE.md"
+CORE = Path(__file__).resolve().parents[1] / "src" / "repro" / "core"
+
+
+def _code_spans(text: str) -> set[str]:
+    """All `backticked` single-token code spans in a markdown file."""
+    return set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", text))
+
+
+@pytest.fixture(scope="module")
+def isa_tokens() -> set[str]:
+    assert ISA_MD.is_file(), "docs/ISA.md is missing"
+    return _code_spans(ISA_MD.read_text())
+
+
+def test_every_unit_kind_documented(isa_tokens):
+    missing = {m.name for m in UnitKind} - isa_tokens
+    assert not missing, f"UnitKind members missing from docs/ISA.md: {missing}"
+
+
+def test_every_op_type_documented(isa_tokens):
+    missing = {m.name for m in OpType} - isa_tokens
+    assert not missing, f"OpType members missing from docs/ISA.md: {missing}"
+
+
+def test_every_role_and_epilogue_documented(isa_tokens):
+    missing = ({m.name for m in LmuRole} | {m.name for m in Epilogue}) \
+        - isa_tokens
+    assert not missing, f"enum members missing from docs/ISA.md: {missing}"
+
+
+def test_every_body_field_documented(isa_tokens):
+    for cls in (MIUBody, SFUBody, LMUBody, MMUBody):
+        fields = {f.name for f in cls.FIELDS}
+        if cls is MIUBody:
+            fields.add("deps")          # the variable tail
+        missing = fields - isa_tokens
+        assert not missing, (f"{cls.__name__} fields missing from "
+                             f"docs/ISA.md: {missing}")
+
+
+def test_documented_opcodes_exist(isa_tokens):
+    """Vice versa: anything that *looks* like an opcode in the docs must
+    be a real OpType member (catches renames and deletions)."""
+    unit_names = "|".join(m.name for m in UnitKind)
+    op_like = {t for t in isa_tokens
+               if re.fullmatch(rf"({unit_names})_[A-Z0-9_]+", t)}
+    ghosts = op_like - set(OpType.__members__)
+    assert not ghosts, f"docs/ISA.md documents nonexistent opcodes: {ghosts}"
+
+
+def test_documented_body_classes_exist(isa_tokens):
+    body_like = {t for t in isa_tokens if t.endswith("Body")}
+    real = {c.__name__ for c in Body.__subclasses__()} | {"MIUBody"}
+    ghosts = body_like - real
+    assert not ghosts, f"docs/ISA.md documents nonexistent bodies: {ghosts}"
+
+
+def test_architecture_md_covers_every_core_module():
+    assert ARCH_MD.is_file(), "docs/ARCHITECTURE.md is missing"
+    text = ARCH_MD.read_text()
+    missing = [p.name for p in sorted(CORE.glob("*.py"))
+               if not p.name.startswith("_") and p.name not in text]
+    assert not missing, (f"docs/ARCHITECTURE.md does not mention core "
+                         f"modules: {missing}")
+
+
+def test_architecture_md_documents_vc_subsystem():
+    text = ARCH_MD.read_text()
+    for needle in ("interleave", "virtual channel", "vc_count",
+                   "vc_arbitration"):
+        assert needle in text.lower() or needle in text, (
+            f"docs/ARCHITECTURE.md lost its {needle!r} section")

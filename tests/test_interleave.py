@@ -1,0 +1,247 @@
+"""Tile-granularity interleave pass: the reordered stream must be a
+permutation of the original that preserves every dataflow edge in
+``CodegenResult.meta``, every ready-list ordering, and each layer's
+internal instruction order — checked property-style over random DAGs —
+and the functional runtime must compute identical numerics from the
+interleaved binary."""
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, strategies as st
+
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
+                        MultiTenantWorkload, NonLinear, OpType, Policy,
+                        apply_permutation, interleave_stream, mlp_graph,
+                        plan_interleave, random_dag, simulate,
+                        validate_stream)
+from repro.core.codegen import _GROUP_MOD
+from repro.core.runtime import DoraRuntime
+
+PLAT = DoraPlatform.vck190()
+
+
+def _compile(workload, **opts):
+    return DoraCompiler(PLAT, Policy.dora()).compile(
+        workload, CompileOptions(engine="list", **opts))
+
+
+def _pair(interleave="none") -> MultiTenantWorkload:
+    mt = MultiTenantWorkload("pair", interleave=interleave)
+    mt.add_tenant("ta", mlp_graph("a", 128, [96, 128, 64], NonLinear.GELU),
+                  priority=2.0)
+    mt.add_tenant("tb", mlp_graph("b", 64, [64, 96, 32], NonLinear.RELU))
+    return mt
+
+
+def _assert_valid_interleave(cg, order):
+    """The tentpole acceptance property: permutation + all of meta.deps
+    + ready-list orderings + per-layer internal order preserved."""
+    n = len(cg.program)
+    assert sorted(order) == list(range(n))
+    pos = [0] * n
+    for newi, old in enumerate(order):
+        pos[old] = newi
+    for i, m in enumerate(cg.meta):
+        for d in m.deps:
+            assert pos[d] < pos[i], f"dataflow edge {d}->{i} reversed"
+    for i, ins in enumerate(cg.program.instructions):
+        if ins.op_type == OpType.MIU_LOAD and ins.body.deps:
+            for lid in ins.body.deps:
+                rs = cg.ready_store.get(lid)
+                if rs is not None:
+                    assert pos[rs] < pos[i], (
+                        f"ready-list store {rs} no longer precedes load {i}")
+    by_layer: dict[int, list[int]] = {}
+    for i, m in enumerate(cg.meta):
+        by_layer.setdefault(m.layer_id, []).append(i)
+    for lid, idxs in by_layer.items():
+        newpos = [pos[i] for i in idxs]
+        assert newpos == sorted(newpos), f"layer {lid} internal order broken"
+
+
+# ---------------------------------------------------------------- properties
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 3000),
+       st.sampled_from(["rr", "priority"]))
+def test_interleave_preserves_dependencies_random_dags(n_layers, seed, policy):
+    g = random_dag(n_layers, seed=seed, max_dim=192)
+    cg = _compile(g).codegen
+    order = plan_interleave(cg, policy=policy, by="layer")
+    _assert_valid_interleave(cg, order)
+    out = apply_permutation(cg, order)
+    validate_stream(out)
+
+
+def test_interleave_multi_tenant_pair():
+    cg = _compile(_pair()).codegen
+    order = plan_interleave(cg, policy="rr")
+    _assert_valid_interleave(cg, order)
+
+
+def test_interleave_deterministic():
+    cg = _compile(_pair()).codegen
+    assert plan_interleave(cg, policy="rr") == plan_interleave(cg, policy="rr")
+
+
+def test_interleave_none_is_identity():
+    cg = _compile(_pair()).codegen
+    assert plan_interleave(cg, policy="none") == list(range(len(cg.program)))
+    assert interleave_stream(cg, policy="none") is cg
+
+
+def test_interleave_rejects_unknown_policy():
+    cg = _compile(_pair()).codegen
+    with pytest.raises(ValueError, match="policy"):
+        plan_interleave(cg, policy="sjf")
+    with pytest.raises(ValueError, match="granularity"):
+        plan_interleave(cg, by="warp")
+    with pytest.raises(ValueError, match="permutation"):
+        apply_permutation(cg, [0] * len(cg.program))
+
+
+def test_apply_permutation_rejects_intra_layer_reorder():
+    """meta.deps encodes only depth-2 ping/pong back-pressure, so an
+    order that swaps two of a layer's instructions can satisfy every
+    recorded dependency yet clobber the runtime's positional ping/pong
+    semantics — apply_permutation must refuse it outright."""
+    cg = _compile(_pair()).codegen
+    idxs = [i for i, m in enumerate(cg.meta) if m.layer_id == 0]
+    order = list(range(len(cg.program)))
+    order[idxs[0]], order[idxs[-1]] = order[idxs[-1]], order[idxs[0]]
+    with pytest.raises(ValueError, match="internal"):
+        apply_permutation(cg, order)
+
+
+def test_validate_stream_rejects_group_collision_interleaving():
+    """validate_stream must catch streams where two layers sharing an
+    LMU logical-group base interleave (their group buffers would
+    overwrite each other in the sequential runtime)."""
+    n_tenants = _GROUP_MOD // 4 + 1
+    mt = MultiTenantWorkload("wide")
+    for t in range(n_tenants):
+        mt.add_tenant(f"t{t}", mlp_graph(f"g{t}", 16, [16, 16]))
+    cg = _compile(mt).codegen
+    colliding = _GROUP_MOD // 4          # layer 0 and this one share base 0
+    a = [i for i, m in enumerate(cg.meta) if m.layer_id == 0]
+    b = [i for i, m in enumerate(cg.meta) if m.layer_id == colliding]
+    assert a and b
+    order = list(range(len(cg.program)))
+    # splice layer `colliding`'s block into the middle of layer 0's block
+    mid = len(a) // 2
+    spliced = a[:mid] + b + a[mid:]
+    for pos, o in zip(sorted(a + b), spliced):
+        order[pos] = o
+    bad = apply_permutation(cg, order)   # layer-internal order intact
+    with pytest.raises(ValueError, match="logical-group"):
+        validate_stream(bad)
+
+
+# ------------------------------------------------------- stream shape + knob
+
+def _tenant_transitions(cg) -> int:
+    ts = [m.tenant for m in cg.meta]
+    return sum(1 for a, b in zip(ts, ts[1:]) if a != b)
+
+
+def test_interleave_alternates_tenants_at_tile_granularity():
+    """The point of the pass: the contiguous per-layer tile loops become
+    an alternating per-tenant stream (many more tenant transitions)."""
+    plain = _compile(_pair()).codegen
+    ilv = interleave_stream(plain, policy="rr")
+    assert _tenant_transitions(ilv) > 2 * _tenant_transitions(plain)
+
+
+def test_interleave_knob_threads_through_compiler_and_workload():
+    # CompileOptions.interleave
+    res = _compile(_pair(), interleave="rr")
+    validate_stream(res.codegen)
+    assert _tenant_transitions(res.codegen) > 2
+    # MultiTenantWorkload.interleave as the default
+    res2 = _compile(_pair(interleave="rr"))
+    assert [i.encode() for i in res2.codegen.program.instructions] == \
+           [i.encode() for i in res.codegen.program.instructions]
+    # explicit "none" overrides the workload default
+    res3 = _compile(_pair(interleave="rr"), interleave="none")
+    assert _tenant_transitions(res3.codegen) < _tenant_transitions(res.codegen)
+    with pytest.raises(ValueError, match="interleave"):
+        _compile(_pair(interleave="wrr"))
+
+
+def test_priority_policy_front_loads_heavy_channel():
+    cg = _compile(_pair()).codegen
+
+    def mean_pos(out, tenant):
+        ps = [i for i, m in enumerate(out.meta) if m.tenant == tenant]
+        return sum(ps) / len(ps)
+
+    heavy0 = interleave_stream(cg, policy="priority",
+                               priorities={0: 8.0, 1: 1.0})
+    heavy1 = interleave_stream(cg, policy="priority",
+                               priorities={0: 1.0, 1: 8.0})
+    assert mean_pos(heavy0, 0) < mean_pos(heavy0, 1)
+    assert mean_pos(heavy1, 1) < mean_pos(heavy1, 0)
+
+
+# ------------------------------------------------------------- correctness
+
+def test_runtime_numerics_survive_interleave():
+    mt = _pair()
+    res = _compile(mt, interleave="rr")
+    merged = mt.merge()
+    inputs = merged.graph.random_inputs(0)
+    ref = merged.graph.reference_execute(inputs)
+    rt = DoraRuntime(res.codegen.memmap)
+    rt.load_inputs(inputs)
+    out = rt.execute(res.codegen.program.encode())   # binary round-trip too
+    for l in merged.graph.layers:
+        np.testing.assert_allclose(out[l.name], ref[l.name],
+                                   rtol=2e-3, atol=2e-3, err_msg=l.name)
+
+
+def test_simulator_accepts_interleaved_stream():
+    res = _compile(_pair(), interleave="rr")
+    rep = simulate(res.codegen, PLAT, arrivals={0: 0.0, 1: 0.0})
+    assert rep.makespan_s > 0
+    prog = res.codegen.program
+    for i, ins in enumerate(prog.instructions):
+        if ins.op_type == OpType.MIU_LOAD and ins.body.deps:
+            for lid in ins.body.deps:
+                rs = res.codegen.ready_store[lid]
+                assert rep.instr_start[i] >= rep.instr_end[rs] - 1e-12
+
+
+def test_group_collision_guard_keeps_colliding_layers_apart():
+    """Logical-group ids cycle mod _GROUP_MOD/4 layers; two colliding
+    layers must never interleave (their group buffers would clobber each
+    other in the sequential runtime)."""
+    n_tenants = _GROUP_MOD // 4 + 2     # enough layers to wrap the cycle
+    mt = MultiTenantWorkload("wide")
+    for t in range(n_tenants):
+        mt.add_tenant(f"t{t}", mlp_graph(f"g{t}", 16, [16, 16]))
+    res = _compile(mt, interleave="rr")
+    cg = res.codegen
+    validate_stream(cg)
+    pos_of_layer: dict[int, list[int]] = {}
+    for i, m in enumerate(cg.meta):
+        pos_of_layer.setdefault(m.layer_id, []).append(i)
+    wrap = _GROUP_MOD // 4
+    assert len(pos_of_layer) == n_tenants    # one MM layer per tenant
+    checked = 0
+    for lid in sorted(pos_of_layer):
+        other = lid + wrap
+        if other in pos_of_layer:
+            assert max(pos_of_layer[lid]) < min(pos_of_layer[other]), (
+                f"colliding layers {lid} and {other} interleaved")
+            checked += 1
+    assert checked == 2     # layers 0/60 and 1/61 wrap the group cycle
+    # and the numerics stay exact across the whole wide stream
+    merged = mt.merge()
+    inputs = merged.graph.random_inputs(0)
+    ref = merged.graph.reference_execute(inputs)
+    rt = DoraRuntime(cg.memmap)
+    rt.load_inputs(inputs)
+    out = rt.execute(cg.program)
+    for l in merged.graph.layers:
+        np.testing.assert_allclose(out[l.name], ref[l.name],
+                                   rtol=2e-3, atol=2e-3, err_msg=l.name)

@@ -1,0 +1,228 @@
+"""MIU virtual channels in the event-driven simulator.
+
+Covers the tentpole acceptance criteria:
+  - vc_count=1 + fifo arbitration reproduces the single in-order stream
+    bit-for-bit (the arbitrated path is exercised directly);
+  - vc_count>1 removes head-of-line blocking: a blocked foreign LOAD no
+    longer stalls another tenant's ready traffic, and joint makespan on
+    a contended pair strictly improves;
+  - the cross-tenant ``miu_wait_s`` accounting regression: queued time
+    is attributed to the actual blocking occupancy intervals, not to
+    the tenant of the immediately preceding instruction.
+"""
+
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
+                        MIUBody, MMUBody, MultiTenantWorkload, NonLinear,
+                        OpType, Policy, Program, UnitKind, interleave_stream,
+                        mk, mlp_graph, simulate)
+from repro.core.codegen import CodegenResult, InstrMeta, MemoryMap
+from repro.core.simulator import _simulate_vc
+
+PLAT = DoraPlatform.vck190()
+
+
+def _pair() -> MultiTenantWorkload:
+    mt = MultiTenantWorkload("pair")
+    mt.add_tenant("ta", mlp_graph("a", 128, [96, 128, 64], NonLinear.GELU),
+                  priority=2.0)
+    mt.add_tenant("tb", mlp_graph("b", 64, [64, 96, 32], NonLinear.RELU))
+    return mt
+
+
+def _compile(workload, **opts):
+    return DoraCompiler(PLAT, Policy.dora()).compile(
+        workload, CompileOptions(engine="list", **opts))
+
+
+# ------------------------------------------------------------ platform knob
+
+def test_platform_defaults_are_single_stream():
+    plat = DoraPlatform.vck190()
+    assert plat.vc_count == 1
+    assert plat.vc_arbitration == "fifo"
+
+
+def test_with_vc_validates():
+    assert PLAT.with_vc(4).vc_count == 4
+    assert PLAT.with_vc(4).vc_arbitration == "rr"
+    with pytest.raises(ValueError, match="vc_count"):
+        PLAT.with_vc(0)
+    res = _compile(_pair())
+    with pytest.raises(ValueError, match="vc_arbitration"):
+        simulate(res.codegen, PLAT.with_vc(2, "lottery"))
+
+
+# -------------------------------------------------- vc=1 fifo == in-order
+
+def test_vc1_fifo_bit_for_bit_matches_inorder_stream():
+    """The arbitrated path collapsed to one fifo channel must reproduce
+    the single in-order stream exactly (same floats, not approximately)."""
+    res = _compile(_pair())
+    arrivals = {0: 0.0, 1: 0.1e-3}
+    classic = simulate(res.codegen, PLAT, arrivals=arrivals)
+    vc1 = _simulate_vc(res.codegen, PLAT, arrivals, None)   # fifo default
+    assert vc1.instr_start == classic.instr_start
+    assert vc1.instr_end == classic.instr_end
+    assert vc1.makespan_s == classic.makespan_s
+    assert vc1.unit_busy_s == classic.unit_busy_s
+    assert vc1.layer_ready_s == classic.layer_ready_s
+    assert vc1.tenant_stats == classic.tenant_stats
+
+
+def test_simulate_dispatches_on_vc_count():
+    res = _compile(_pair())
+    rep1 = simulate(res.codegen, PLAT.with_vc(1, "fifo"))
+    rep_default = simulate(res.codegen, PLAT)
+    assert rep1.instr_start == rep_default.instr_start
+
+
+# -------------------------------------------------- synthetic MIU scenarios
+
+def _miu_load(layer_id: int, rows: int) -> object:
+    return mk(UnitKind.MIU, 0, OpType.MIU_LOAD,
+              MIUBody(0, 0, 0, rows, 1, 0, rows, 0, 1, layer_id))
+
+
+def _flat_platform() -> DoraPlatform:
+    """1 byte/s DRAM, 1 Hz MMU, no fixed overheads: durations become the
+    raw byte / cycle counts, so expected times are exact integers."""
+    return replace(PLAT, dram_bw_bytes=1.0, freq_mmu_hz=1.0,
+                   sync_overhead_s=0.0, startup_s=0.0)
+
+
+def _synthetic(instrs, metas, tenant_of) -> CodegenResult:
+    prog = Program(list(instrs))
+    return CodegenResult(prog, MemoryMap(), list(metas), {}, dict(tenant_of))
+
+
+def test_miu_wait_attributed_to_blocking_occupancy():
+    """Regression (satellite fix): tenant 0's second LOAD queues behind
+    [foreign 10 s, own 1 s]; the old accounting looked only at the
+    immediately preceding instruction (own) and charged 0 for it.  The
+    occupancy-interval accounting charges the foreign 10 s for both of
+    tenant 0's loads: 20 s total, not 10 s."""
+    instrs = [_miu_load(0, 10), _miu_load(1, 1), _miu_load(1, 1)]
+    metas = [InstrMeta(bytes_moved=10, layer_id=0, tenant=1),
+             InstrMeta(bytes_moved=1, layer_id=1, tenant=0),
+             InstrMeta(bytes_moved=1, layer_id=1, tenant=0)]
+    rep = simulate(_synthetic(instrs, metas, {0: 1, 1: 0}), _flat_platform())
+    assert rep.instr_start == [0.0, 10.0, 11.0]
+    # load 1 queued [0,10) behind the foreign load; load 2 queued [0,11)
+    # of which 10 s foreign, 1 s its own tenant's traffic (not charged)
+    assert rep.tenant_stats[0].miu_wait_s == pytest.approx(20.0)
+    assert rep.tenant_stats[1].miu_wait_s == pytest.approx(0.0)
+
+
+def test_miu_wait_charges_head_blocked_idle_gaps_to_blocker():
+    """A foreign LOAD blocked at the head of the queue keeps the MIU
+    idle; that gap is attributed to the blocking tenant too."""
+    gemm = mk(UnitKind.MMU, 0, OpType.MMU_GEMM,
+              MMUBody(1, 0, 1, 1, 1, 0, 1, 2))
+    instrs = [gemm, _miu_load(0, 10), _miu_load(1, 1)]
+    metas = [InstrMeta(mmu_cycles=5, layer_id=0, tenant=1),
+             InstrMeta(deps=[0], bytes_moved=10, layer_id=0, tenant=1),
+             InstrMeta(bytes_moved=1, layer_id=1, tenant=0)]
+    rep = simulate(_synthetic(instrs, metas, {0: 1, 1: 0}), _flat_platform())
+    # MMU [0,5), foreign load [5,15), own load [15,16):
+    # waited [0,15) = 5 s head-blocked idle + 10 s foreign busy
+    assert rep.instr_start == [0.0, 5.0, 15.0]
+    assert rep.tenant_stats[0].miu_wait_s == pytest.approx(15.0)
+
+
+def test_vc_removes_head_of_line_blocking():
+    """With 2 channels the blocked foreign head no longer stalls tenant
+    0's ready traffic: its loads run during the stall, its cross-tenant
+    wait drops to zero, and the makespan strictly improves."""
+    gemm = mk(UnitKind.MMU, 0, OpType.MMU_GEMM,
+              MMUBody(1, 0, 1, 1, 1, 0, 1, 2))
+    instrs = [gemm, _miu_load(0, 10), _miu_load(1, 1), _miu_load(1, 1)]
+    metas = [InstrMeta(mmu_cycles=5, layer_id=0, tenant=1),
+             InstrMeta(deps=[0], bytes_moved=10, layer_id=0, tenant=1),
+             InstrMeta(bytes_moved=1, layer_id=1, tenant=0),
+             InstrMeta(bytes_moved=1, layer_id=1, tenant=0)]
+    result = _synthetic(instrs, metas, {0: 1, 1: 0})
+    plat = _flat_platform()
+    blocked = simulate(result, plat)                      # vc=1
+    vc2 = simulate(result, plat.with_vc(2, "rr"))
+    assert blocked.makespan_s == pytest.approx(17.0)      # 5+10+1+1
+    assert vc2.makespan_s == pytest.approx(15.0)          # loads fill stall
+    assert vc2.instr_start[2] < blocked.instr_start[2]
+    assert vc2.tenant_stats[0].miu_wait_s == pytest.approx(0.0)
+    assert vc2.makespan_s < blocked.makespan_s
+
+
+def test_vc_priority_arbitration_prefers_heavy_tenant():
+    """Both channel heads ready at the same instant: priority arbitration
+    serves the heavier tenant first, rr alternates."""
+    instrs = [_miu_load(0, 4), _miu_load(1, 4)]
+    metas = [InstrMeta(bytes_moved=4, layer_id=0, tenant=0),
+             InstrMeta(bytes_moved=4, layer_id=1, tenant=1)]
+    result = _synthetic(instrs, metas, {0: 0, 1: 1})
+    plat = _flat_platform()
+    rep = simulate(result, plat.with_vc(2, "priority"),
+                   priorities={0: 1.0, 1: 8.0})
+    assert rep.instr_start[1] == 0.0 and rep.instr_start[0] == 4.0
+    rep2 = simulate(result, plat.with_vc(2, "priority"),
+                    priorities={0: 8.0, 1: 1.0})
+    assert rep2.instr_start[0] == 0.0 and rep2.instr_start[1] == 4.0
+
+
+# ------------------------------------------------------ compiled workloads
+
+def test_vc_improves_contended_compiled_pair():
+    """End to end on a memory-heavy contended pair: tile interleave +
+    virtual channels strictly beat the contiguous single-stream machine,
+    and adding channels never hurts."""
+    mt = MultiTenantWorkload("contend")
+    mt.add_tenant("m0", mlp_graph("m0", 512, [512, 512, 512]))
+    mt.add_tenant("m1", mlp_graph("m1", 512, [512, 512, 512]))
+    res = _compile(mt)
+    arrivals = {0: 0.0, 1: 0.0}
+    base = simulate(res.codegen, PLAT, arrivals=arrivals)
+    ilv = interleave_stream(res.codegen, policy="rr")
+    vc1 = simulate(ilv, PLAT, arrivals=arrivals)
+    vc2 = simulate(ilv, PLAT.with_vc(2, "rr"), arrivals=arrivals)
+    vc4 = simulate(ilv, PLAT.with_vc(4, "rr"), arrivals=arrivals)
+    assert vc2.makespan_s < base.makespan_s
+    assert vc4.makespan_s <= vc2.makespan_s + 1e-12
+    assert vc2.makespan_s <= vc1.makespan_s + 1e-12
+
+
+def test_vc_respects_ready_list_and_unit_exclusivity():
+    res = _compile(_pair(), interleave="rr")
+    rep = simulate(res.codegen, PLAT.with_vc(4, "rr"),
+                   arrivals={0: 0.0, 1: 0.05e-3})
+    cg = res.codegen
+    # ready-list RAW: dependent loads never start before the store ends
+    for i, ins in enumerate(cg.program.instructions):
+        if ins.op_type == OpType.MIU_LOAD and ins.body.deps:
+            for lid in ins.body.deps:
+                rs = cg.ready_store[lid]
+                assert rep.instr_start[i] >= rep.instr_end[rs] - 1e-12
+    # the physical MIU still serializes: no overlapping service intervals
+    by_unit: dict = {}
+    for i, ins in enumerate(cg.program.instructions):
+        by_unit.setdefault((ins.unit_kind, ins.unit_index), []).append(i)
+    for unit, idxs in by_unit.items():
+        iv = sorted((rep.instr_start[i], rep.instr_end[i]) for i in idxs)
+        for (s1, e1), (s2, e2) in zip(iv, iv[1:]):
+            assert s2 >= e1 - 1e-12
+    # arrivals still hold per instruction
+    for i, m in enumerate(cg.meta):
+        if m.tenant == 1:
+            assert rep.instr_start[i] >= 0.05e-3 - 1e-12
+
+
+def test_vc_channels_by_layer_group_for_untagged_programs():
+    """Single-tenant programs fall back to per-layer-group channels: the
+    simulation still completes and never regresses vs a single stream."""
+    g = mlp_graph("solo", 256, [256, 256, 256])
+    res = _compile(g)
+    base = simulate(res.codegen, PLAT)
+    vc = simulate(res.codegen, PLAT.with_vc(2, "rr"))
+    assert vc.makespan_s <= base.makespan_s + 1e-12
+    assert vc.makespan_s > 0
