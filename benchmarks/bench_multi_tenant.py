@@ -24,18 +24,31 @@ tile-interleaved (``interleave="rr"``) and simulated with
 ``vc_count`` in {1, 2, 4} MIU virtual channels (rr arbitration);
 ``recovered_gap_frac`` is (base - vc makespan) / (base - schedule
 makespan), i.e. the fraction of the head-of-line-blocking loss won back
-(>1 means the simulator beat the analytic schedule bound).
+(>1 means the simulator beat the analytic schedule bound).  Each sweep
+also reports the *interleave-aware* schedule bound
+(``interleave_aware_bound``: MIU transfer times share-scaled during
+cross-tenant overlap) next to the engines' contiguous-assumption bound
+— the aware bound tracks the arbitrated simulator much more closely.
+
+The ``qos_sweep`` rows exercise the weighted-fair (wfq) arbitration on
+a 3-tenant workload with explicit per-tenant ``bandwidth_shares`` and
+``vc_count`` below the tenant count (tenants hash into shared channels
+and pool their guarantees): per tenant it reports the configured share,
+the delivered guaranteed-share satisfaction (``miu_bytes /
+expected_bytes``, ~1.0 when the guarantee holds), and the p95 tail
+latency — heavier shares buy visibly shorter tails.
 
 Usage: PYTHONPATH=src python benchmarks/bench_multi_tenant.py
        PYTHONPATH=src python benchmarks/bench_multi_tenant.py --vc 4
+       PYTHONPATH=src python benchmarks/bench_multi_tenant.py --qos
    or: PYTHONPATH=src python -m benchmarks.run multi_tenant
 """
 
 from __future__ import annotations
 
 from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
-                        MultiTenantWorkload, Policy, interleave_stream,
-                        simulate)
+                        MultiTenantWorkload, Policy, interleave_aware_bound,
+                        interleave_stream, simulate)
 from repro.configs import paper_models
 
 PLAT = DoraPlatform.vck190()
@@ -52,7 +65,15 @@ SCENARIOS = {
         "BERT-S": paper_models.get("BERT-S"),
         "NCF-S": paper_models.get("NCF-S"),
     },
+    "small_trio": lambda: {
+        "BERT-S": paper_models.get("BERT-S"),
+        "NCF-S": paper_models.get("NCF-S"),
+        "MLP-S": paper_models.get("MLP-S"),
+    },
 }
+
+# explicit per-tenant DRAM guarantees for the qos_sweep (sum = 1)
+QOS_SHARES = {"BERT-S": 0.5, "NCF-S": 0.3, "MLP-S": 0.2}
 
 
 _SOLO_CACHE: dict[str, tuple[dict[str, float], dict[str, float]]] = {}
@@ -126,14 +147,20 @@ def vc_sweep(scenario: str, vcs: tuple[int, ...] = (1, 2, 4),
     """Joint makespan vs MIU virtual-channel count, on the
     tile-interleaved joint program.  One (cached) compile, N cheap
     simulations; ``base_sim_s`` is today's machine (contiguous stream,
-    vc=1)."""
+    vc=1).  ``aware_sched_s`` is the interleave-aware schedule bound
+    (rr arbitration splits bandwidth evenly, so every tenant's share is
+    priority-proportional — equal here)."""
     mt, res = _joint_compile(scenario)
     arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
     prios = {ti: t.priority for ti, t in enumerate(mt.tenants)}
     ilv = interleave_stream(res.codegen, policy="rr", priorities=prios)
 
+    bound = interleave_aware_bound(
+        res.schedule, res.graph, PLAT, Policy.dora(), res.tenant_of,
+        mt.resolve_bandwidth_shares(), release=res.release)
     out = {
         "sched_s": res.makespan_s,
+        "aware_sched_s": bound.makespan_s,
         "base_sim_s": simulate(res.codegen, PLAT,
                                arrivals=arrivals).makespan_s,
         "vc": {},
@@ -146,7 +173,58 @@ def vc_sweep(scenario: str, vcs: tuple[int, ...] = (1, 2, 4),
             "joint_sim_s": mk,
             "recovered_gap_frac": (out["base_sim_s"] - mk) / gap
             if gap > 0 else 0.0,
+            # schedule-vs-simulator gap under each analytic bound
+            "bound_gap_contig": abs(mk - out["sched_s"]),
+            "bound_gap_aware": abs(mk - out["aware_sched_s"]),
         }
+    return out
+
+
+def qos_sweep(scenario: str = "small_trio",
+              shares: dict[str, float] | None = None,
+              vcs: tuple[int, ...] = (2, 3)) -> dict:
+    """Weighted-fair QoS on a 3-tenant workload: explicit bandwidth
+    shares, priority-stride interleave matching the shares, wfq MIU
+    arbitration.  ``vc_count < n_tenants`` (the first sweep point)
+    forces tenants to hash into shared channels and pool their
+    guarantees; per tenant we report the configured share, delivered
+    guaranteed-share satisfaction, and p95 tail latency."""
+    shares = dict(shares or QOS_SHARES)
+    graphs = SCENARIOS[scenario]()
+    mt = MultiTenantWorkload(scenario, interleave="priority",
+                             bandwidth_shares=shares)
+    for name, g in graphs.items():
+        mt.add_tenant(name, g)
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(mt, CompileOptions(engine="list", qos="wfq"))
+    arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
+
+    out = {
+        "sched_s": res.makespan_s,
+        "aware_sched_s": res.interleave_aware_makespan_s,
+        "base_sim_s": simulate(res.codegen, PLAT,
+                               arrivals=arrivals).makespan_s,
+        "vc": {},
+    }
+    for v in vcs:
+        rep = simulate(res.codegen, PLAT.with_vc(v, "wfq"),
+                       arrivals=arrivals,
+                       bandwidth_shares=res.bandwidth_shares)
+        row = {"joint_sim_s": rep.makespan_s,
+               "bound_gap_contig": abs(rep.makespan_s - out["sched_s"]),
+               "bound_gap_aware": abs(rep.makespan_s
+                                      - out["aware_sched_s"]),
+               "tenants": {}}
+        for ti, t in enumerate(mt.tenants):
+            s = rep.tenant_stats[ti]
+            row["tenants"][t.name] = {
+                "share": res.bandwidth_shares[ti],
+                "satisfaction": s.guaranteed_share_satisfaction,
+                "tail_latency_s": s.tail_latency_s,
+                "guaranteed_bytes": s.guaranteed_bytes,
+                "opportunistic_bytes": s.opportunistic_bytes,
+            }
+        out["vc"][v] = row
     return out
 
 
@@ -184,15 +262,42 @@ def main(emit) -> None:
     for scenario in SCENARIOS:
         emit_vc_sweep(emit, scenario, vc_sweep(scenario))
 
+    # weighted-fair QoS sweep: 3 tenants, explicit shares, wfq MIU
+    emit_qos_sweep(emit, "small_trio", qos_sweep())
+
 
 def emit_vc_sweep(emit, scenario: str, sw: dict) -> None:
     pre = f"multi_tenant.{scenario}"
     emit(f"{pre}.vc_sweep.base_joint_makespan_s", sw["base_sim_s"],
-         f"contiguous stream, vc=1 (sched bound={sw['sched_s']:.6g})")
+         f"contiguous stream, vc=1 (sched bound={sw['sched_s']:.6g}, "
+         f"interleave-aware bound={sw['aware_sched_s']:.6g})")
     for v, row in sw["vc"].items():
         emit(f"{pre}.vc{v}.joint_makespan_s", row["joint_sim_s"],
              f"tile-interleaved rr, {v} MIU VC; recovered_gap_frac="
-             f"{row['recovered_gap_frac']:.3f}")
+             f"{row['recovered_gap_frac']:.3f}; bound gap "
+             f"contig={row['bound_gap_contig']:.6g} "
+             f"aware={row['bound_gap_aware']:.6g}")
+
+
+def emit_qos_sweep(emit, scenario: str, sw: dict) -> None:
+    pre = f"multi_tenant.{scenario}.qos"
+    emit(f"{pre}.sched_bound_s", sw["sched_s"],
+         "contiguous-assumption stage-2 bound")
+    emit(f"{pre}.interleave_aware_bound_s", sw["aware_sched_s"],
+         "share-scaled MIU transfer times during cross-tenant overlap")
+    emit(f"{pre}.base_joint_makespan_s", sw["base_sim_s"],
+         "contiguous stream, vc=1")
+    for v, row in sw["vc"].items():
+        emit(f"{pre}.vc{v}.joint_makespan_s", row["joint_sim_s"],
+             f"wfq arbitration; bound gap contig="
+             f"{row['bound_gap_contig']:.6g} "
+             f"aware={row['bound_gap_aware']:.6g}")
+        for name, t in row["tenants"].items():
+            emit(f"{pre}.vc{v}.{name}.satisfaction", t["satisfaction"],
+                 f"share={t['share']:.3g},"
+                 f"tail_p95={t['tail_latency_s']:.6g},"
+                 f"guaranteed_bytes={t['guaranteed_bytes']:.6g},"
+                 f"opportunistic_bytes={t['opportunistic_bytes']:.6g}")
 
 
 if __name__ == "__main__":
@@ -202,6 +307,9 @@ if __name__ == "__main__":
     ap.add_argument("--vc", type=int, default=None, metavar="N",
                     help="only run the virtual-channel sweep with "
                          "vc_count in {1, N} (default: full benchmark)")
+    ap.add_argument("--qos", action="store_true",
+                    help="only run the weighted-fair QoS sweep "
+                         "(3 tenants, explicit bandwidth shares, wfq)")
     args = ap.parse_args()
     print("name,value,derived")
 
@@ -210,7 +318,9 @@ if __name__ == "__main__":
             value = f"{value:.6g}"
         print(f"{name},{value},{derived}")
 
-    if args.vc is not None:
+    if args.qos:
+        emit_qos_sweep(_emit, "small_trio", qos_sweep())
+    elif args.vc is not None:
         vcs = (1, args.vc) if args.vc != 1 else (1,)
         for scenario in SCENARIOS:
             emit_vc_sweep(_emit, scenario, vc_sweep(scenario, vcs=vcs))

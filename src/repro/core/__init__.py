@@ -11,14 +11,18 @@ from .interleave import (apply_permutation, interleave_stream,
 from .isa import (Epilogue, Instruction, LMUBody, LmuRole, MIUBody, MMUBody,
                   OpType, Program, SFUBody, UnitKind, disassemble, mk)
 from .milp import MilpScheduler, SolveResult
-from .multi_tenant import (MergedWorkload, MultiTenantWorkload, TenantSpec)
+from .multi_tenant import (QOS_POLICIES, MergedWorkload, MultiTenantWorkload,
+                           TenantSpec)
 from .partition import PartitionedResult, partitioned_solve, split_segments
-from .perf_model import (CandidateMode, DoraPlatform, Policy, TilePlan,
-                         TpuGemmTiles, build_candidate_table,
+from .perf_model import (VC_ARBITRATIONS, CandidateMode, DoraPlatform, Policy,
+                         TilePlan, TpuGemmTiles, build_candidate_table,
                          enumerate_layer_candidates, layer_latency,
-                         plan_tpu_gemm_tiles, single_pe_efficiency)
+                         mode_latency_at_share, plan_tpu_gemm_tiles,
+                         share_scaled_platform, single_pe_efficiency)
 from .runtime import DoraRuntime
-from .schedule import Schedule, ScheduleEntry, list_schedule, sequential_schedule
+from .schedule import (InterleaveBound, Schedule, ScheduleEntry,
+                       interleave_aware_bound, list_schedule,
+                       sequential_schedule)
 from .simulator import SimReport, TenantSimStats, simulate
 
 __all__ = [n for n in dir() if not n.startswith("_")]

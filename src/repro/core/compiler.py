@@ -20,13 +20,17 @@ from .ga import GAConfig, GAResult, GAScheduler
 from .graph import WorkloadGraph
 from .interleave import POLICIES as INTERLEAVE_POLICIES
 from .milp import MilpScheduler, SolveResult
-from .multi_tenant import MultiTenantWorkload
+from .multi_tenant import QOS_POLICIES, MultiTenantWorkload
 from .partition import partitioned_solve
 from .perf_model import (CandidateMode, DoraPlatform, Policy,
                          build_candidate_table)
 from .runtime import DoraRuntime, MatmulFn
-from .schedule import Schedule, list_schedule, sequential_schedule
+from .schedule import (InterleaveBound, Schedule, interleave_aware_bound,
+                       list_schedule, sequential_schedule)
 from .simulator import SimReport, simulate
+
+# stage-2 engines (docs-synced by tests/test_docs.py)
+ENGINES = ("milp", "ga", "list", "sequential")
 
 
 @dataclass
@@ -39,6 +43,13 @@ class CompileOptions:
     # "none" | "rr" | "priority"; None defers to the workload's own
     # ``MultiTenantWorkload.interleave`` setting ("none" single-tenant).
     interleave: str | None = None
+    # multi-tenant QoS: "wfq" resolves per-tenant bandwidth shares
+    # (MultiTenantWorkload.bandwidth_shares, else priority-proportional),
+    # computes the interleave-aware schedule bound, and makes
+    # DoraCompiler.simulate feed the shares to the wfq arbitration.
+    # "none" disables; None defers to the workload ("wfq" iff it carries
+    # explicit bandwidth_shares).
+    qos: str | None = None
 
 
 @dataclass
@@ -58,10 +69,22 @@ class CompileResult:
     workload: MultiTenantWorkload | None = None
     tenant_of: dict[int, int] = field(default_factory=dict)
     release: dict[int, float] = field(default_factory=dict)
+    # QoS compilations only (CompileOptions.qos resolved to "wfq"):
+    bandwidth_shares: dict[int, float] = field(default_factory=dict)
+    qos_bound: InterleaveBound | None = None
 
     @property
     def makespan_s(self) -> float:
         return self.schedule.makespan
+
+    @property
+    def interleave_aware_makespan_s(self) -> float:
+        """The interleave-aware schedule bound when QoS was resolved
+        (share-scaled MIU transfer times during cross-tenant overlap),
+        else the engine's contiguous-assumption makespan."""
+        if self.qos_bound is not None:
+            return self.qos_bound.makespan_s
+        return self.makespan_s
 
     def per_tenant_makespan(self) -> dict[str, float]:
         """Tenant name -> completion of its last layer minus its
@@ -118,6 +141,20 @@ class DoraCompiler:
         if ilv not in INTERLEAVE_POLICIES:
             raise ValueError(f"unknown interleave policy {ilv!r}; "
                              f"expected one of {INTERLEAVE_POLICIES}")
+        qos = options.qos
+        if qos is None:
+            qos = ("wfq" if mt_workload is not None
+                   and mt_workload.bandwidth_shares is not None else "none")
+        if qos not in QOS_POLICIES:
+            raise ValueError(f"unknown qos policy {qos!r}; "
+                             f"expected one of {QOS_POLICIES}")
+        shares: dict[int, float] = {}
+        if qos == "wfq":
+            if mt_workload is None:
+                raise ValueError(
+                    "qos='wfq' requires a MultiTenantWorkload (bandwidth "
+                    "shares are per-tenant guarantees)")
+            shares = mt_workload.resolve_bandwidth_shares()
 
         t0 = time.perf_counter()
         candidates = build_candidate_table(graph, self.platform, self.policy,
@@ -166,17 +203,26 @@ class DoraCompiler:
         t2 = time.perf_counter()
 
         schedule.validate(graph, self.platform, release=release)
+        qos_bound = None
+        if shares:
+            qos_bound = interleave_aware_bound(
+                schedule, graph, self.platform, self.policy, tenant_of,
+                shares, release=release)
         ilv_prios = None
         if mt_workload is not None:
-            ilv_prios = {ti: t.priority
-                         for ti, t in enumerate(mt_workload.tenants)}
+            # the priority interleave weights channels by the guaranteed
+            # share when QoS is on, so the emitted chunk mix matches what
+            # the wfq arbitration will grant; plain priorities otherwise
+            ilv_prios = shares or {ti: t.priority
+                                   for ti, t in enumerate(mt_workload.tenants)}
         cg = generate(graph, schedule, self.platform, tenant_of=tenant_of,
                       interleave=ilv, interleave_priorities=ilv_prios)
         t3 = time.perf_counter()
 
         return CompileResult(graph, self.platform, self.policy, candidates,
                              schedule, cg, t1 - t0, t2 - t1, t3 - t2,
-                             trace, optimal, mt_workload, tenant_of, release)
+                             trace, optimal, mt_workload, tenant_of, release,
+                             shares, qos_bound)
 
     # -------------------------------------------------------------- backends
     def execute(self, result: CompileResult,
@@ -196,4 +242,5 @@ class DoraCompiler:
             priorities = {ti: t.priority
                           for ti, t in enumerate(result.workload.tenants)}
         return simulate(result.codegen, self.platform, arrivals=arrivals,
-                        priorities=priorities)
+                        priorities=priorities,
+                        bandwidth_shares=result.bandwidth_shares or None)

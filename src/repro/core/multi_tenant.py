@@ -38,6 +38,10 @@ from .interleave import POLICIES as INTERLEAVE_POLICIES
 
 TENANT_SEP = "::"
 
+# QoS policies accepted by CompileOptions.qos (None defers to the
+# workload: "wfq" when it carries bandwidth_shares, "none" otherwise)
+QOS_POLICIES = ("none", "wfq")
+
 
 @dataclass(frozen=True)
 class TenantSpec:
@@ -78,12 +82,22 @@ class MultiTenantWorkload:
     full tile loop contiguously — the codegen half of the virtual-channel
     subsystem ("priority" weights channels by tenant priority).  A
     ``CompileOptions.interleave`` value overrides it per compile.
+
+    ``bandwidth_shares`` is the QoS knob: tenant name -> guaranteed
+    fraction of DRAM bandwidth, consumed by the simulator's ``wfq``
+    virtual-channel arbitration and by the interleave-aware schedule
+    bound.  Shares must be positive and sum to <= 1; tenants left out
+    split the remaining headroom in proportion to their priorities.
+    Setting it makes ``CompileOptions.qos`` default to "wfq"; leaving
+    it None makes QoS fall back to priority-proportional shares when
+    explicitly enabled.
     """
 
     name: str
     tenants: list[TenantSpec] = field(default_factory=list)
     mmu_cap: int | None = None
     interleave: str = "none"
+    bandwidth_shares: dict[str, float] | None = None
 
     def add_tenant(self, name: str, graph: WorkloadGraph,
                    priority: float = 1.0,
@@ -97,6 +111,49 @@ class MultiTenantWorkload:
         spec = TenantSpec(name, graph, priority, arrival_s)
         self.tenants.append(spec)
         return spec
+
+    def resolve_bandwidth_shares(self) -> dict[int, float]:
+        """Tenant index -> guaranteed DRAM bandwidth fraction.
+
+        Explicit ``bandwidth_shares`` win (validated: known tenant
+        names, every share > 0, sum <= 1; unlisted tenants split the
+        leftover headroom priority-proportionally).  Without explicit
+        shares, every tenant's share is its priority over the priority
+        sum — so a plain priority-weighted workload already has a
+        well-defined guarantee."""
+        if not self.tenants:
+            raise ValueError(f"{self.name}: no tenants")
+        names = [t.name for t in self.tenants]
+        if self.bandwidth_shares is None:
+            psum = sum(t.priority for t in self.tenants)
+            return {ti: t.priority / psum
+                    for ti, t in enumerate(self.tenants)}
+        unknown = set(self.bandwidth_shares) - set(names)
+        if unknown:
+            raise ValueError(f"{self.name}: bandwidth_shares name "
+                             f"unknown tenants {sorted(unknown)}")
+        for n, s in self.bandwidth_shares.items():
+            if s <= 0.0:
+                raise ValueError(f"{self.name}: tenant {n!r} bandwidth "
+                                 f"share must be > 0, got {s}")
+        total = sum(self.bandwidth_shares.values())
+        if total > 1.0 + 1e-9:
+            raise ValueError(f"{self.name}: bandwidth shares sum to "
+                             f"{total:.6g} > 1")
+        shares = {ti: self.bandwidth_shares.get(t.name, 0.0)
+                  for ti, t in enumerate(self.tenants)}
+        missing = [ti for ti, s in shares.items() if s <= 0.0]
+        if missing:
+            rest = 1.0 - total
+            if rest <= 1e-12:
+                raise ValueError(
+                    f"{self.name}: tenants "
+                    f"{[names[ti] for ti in missing]} have no bandwidth "
+                    "share and the explicit shares leave no headroom")
+            psum = sum(self.tenants[ti].priority for ti in missing)
+            for ti in missing:
+                shares[ti] = rest * self.tenants[ti].priority / psum
+        return shares
 
     def merge(self) -> MergedWorkload:
         if not self.tenants:

@@ -40,7 +40,7 @@ def round_up(a: int, b: int) -> int:
 # ---------------------------------------------------------------------------
 
 # MIU virtual-channel arbitration policies (see simulator._simulate_vc)
-VC_ARBITRATIONS = ("fifo", "rr", "priority")
+VC_ARBITRATIONS = ("fifo", "rr", "priority", "wfq")
 
 
 @dataclass(frozen=True)
@@ -99,8 +99,8 @@ class DoraPlatform:
     def with_vc(self, vc_count: int, arbitration: str = "rr"
                 ) -> "DoraPlatform":
         """Same platform with ``vc_count`` MIU virtual channels under the
-        given arbitration policy (fifo | rr | priority); both values are
-        validated by ``__post_init__``."""
+        given arbitration policy (fifo | rr | priority | wfq); both
+        values are validated by ``__post_init__``."""
         return replace(self, vc_count=vc_count, vc_arbitration=arbitration)
 
     @classmethod
@@ -350,6 +350,39 @@ def layer_latency(layer: Layer, plan: TilePlan, platform: DoraPlatform,
         else:
             total += nl_t + 2 * M * N * platform.dtype_bytes / platform.dram_bw_bytes
     return total
+
+
+# ---------------------------------------------------------------------------
+# Interleave-aware transfer-time model (QoS)
+# ---------------------------------------------------------------------------
+
+def share_scaled_platform(platform: DoraPlatform,
+                          share: float) -> DoraPlatform:
+    """The platform as one tenant sees it while its MIU traffic is
+    interleaved with other tenants' traffic under weighted-fair
+    arbitration: the DRAM bandwidth shrinks to the tenant's guaranteed
+    share, everything on-chip is unchanged.  This is the transfer-time
+    model behind the interleave-aware schedule bound
+    (``schedule.interleave_aware_bound``)."""
+    if not 0.0 < share <= 1.0:
+        raise ValueError(f"bandwidth share must be in (0, 1], got {share}")
+    return replace(platform, dram_bw_bytes=platform.dram_bw_bytes * share)
+
+
+def mode_latency_at_share(layer: Layer, mode: "CandidateMode",
+                          platform: DoraPlatform, policy: Policy,
+                          share: float) -> float:
+    """Re-evaluate one candidate mode's latency with the layer's DRAM
+    transfers running at ``share`` of the platform bandwidth (the
+    tenant's guaranteed share while other tenants' interleaved traffic
+    contends for the MIU).  ``share=1`` reproduces ``mode.latency_s``;
+    shrinking the share can only inflate the DRAM-bound component, so
+    the result is monotonically >= the contiguous-assumption latency."""
+    if share >= 1.0:
+        return mode.latency_s
+    scaled = share_scaled_platform(platform, share)
+    return layer_latency(layer, mode.plan, scaled, policy,
+                         n_sfu=mode.n_sfu)
 
 
 # ---------------------------------------------------------------------------

@@ -36,11 +36,34 @@ arbitrates among ready channel heads:
              (weights from the ``priorities`` argument, e.g. tenant
              priorities; work-conserving: an absent channel never
              reserves bandwidth).
+  wfq      — weighted-fair (DRR-style) arbitration: each channel owns a
+             bandwidth share (``bandwidth_shares``, else priorities
+             normalized, else equal) and a byte-denominated *deficit
+             counter*.  Under contention a channel may only be served
+             once its deficit covers the head transfer's bytes; deficits
+             are topped up in proportion to the shares by the minimal
+             amount that makes some contender eligible, so every
+             backlogged channel's credit grows at its share rate and no
+             tenant can ever be starved, however adversarial the shares.
+             Deficits stay in [0, head bytes] by construction — credit
+             never banks across idle periods.
 
 All policies are work-conserving and deterministic; arbitration only
 chooses among heads that are ready at the earliest possible service
 time, so adding channels can only remove head-of-line blocking, never
 add idle time.
+
+QoS accounting: every MIU byte a tenant moves is classified as
+*guaranteed* (served under contention, paid for by the weighted-fair
+machinery) or *opportunistic* (served while no other channel contended
+— the work-conserving bonus).  ``TenantSimStats.expected_bytes`` is the
+fluid-fair entitlement while backlogged: at every MIU grant, each
+channel with a ready head is entitled to its weight's fraction of the
+granted bytes (all of them when it is alone).  ``miu_bytes /
+expected_bytes`` is the tenant's guaranteed-share satisfaction — ~1.0
+under wfq arbitration, dipping only as far as the within-channel FIFO
+order deviates from the share mix when ``vc_count`` < #tenants forces
+channel sharing.
 """
 
 from __future__ import annotations
@@ -65,6 +88,22 @@ class TenantSimStats:
     tail_latency_s: float         # p95 of layer completion - arrival_s
     miu_wait_s: float             # MIU queueing behind OTHER tenants
     n_instructions: int = 0
+    # QoS byte accounting (see module docstring):
+    miu_bytes: float = 0.0            # total DRAM bytes the tenant moved
+    guaranteed_bytes: float = 0.0     # bytes served under contention
+    opportunistic_bytes: float = 0.0  # bytes served with no contender
+    expected_bytes: float = 0.0       # fluid-fair entitlement while
+                                      # backlogged (share-weighted)
+
+    @property
+    def guaranteed_share_satisfaction(self) -> float:
+        """Bytes actually served relative to the tenant's share-weighted
+        fluid-fair entitlement while it had traffic backlogged; 1.0 for
+        single-stream (vc_count=1) simulations where no entitlement is
+        tracked."""
+        if self.expected_bytes <= 0.0:
+            return 1.0
+        return self.miu_bytes / self.expected_bytes
 
 
 @dataclass
@@ -123,6 +162,12 @@ class _SimState:
         self.unit_busy: dict[tuple[UnitKind, int], float] = {}
         self.layer_ready: dict[int, float] = {}
         self.miu_wait: dict[int, float] = {}
+        # QoS byte accounting (tenant -> bytes); expected is filled by
+        # the arbitration loop, the rest by issue()
+        self.miu_bytes: dict[int, float] = {}
+        self.g_bytes: dict[int, float] = {}
+        self.o_bytes: dict[int, float] = {}
+        self.x_bytes: dict[int, float] = {}
         # per-MIU occupancy history in service order, as prefix sums so
         # each wait query is O(log n): interval k's *span* is
         # (end_k - end_{k-1}), i.e. its busy time plus the idle gap
@@ -165,7 +210,8 @@ class _SimState:
             dep_times.append(self.arrivals.get(meta.tenant, 0.0))
         return max(dep_times, default=0.0)
 
-    def issue(self, i: int, key: tuple[UnitKind, int], ready: float) -> None:
+    def issue(self, i: int, key: tuple[UnitKind, int], ready: float,
+              contended: bool = False) -> None:
         instr = self.result.program.instructions[i]
         meta = self.result.meta[i]
         t0 = max(self.unit_free.get(key, 0.0), ready)
@@ -176,6 +222,12 @@ class _SimState:
             if w > 0.0:
                 self.miu_wait[meta.tenant] = (
                     self.miu_wait.get(meta.tenant, 0.0) + w)
+        if instr.op_type in _MIU_OPS and meta.tenant >= 0:
+            b = float(meta.bytes_moved)
+            self.miu_bytes[meta.tenant] = (
+                self.miu_bytes.get(meta.tenant, 0.0) + b)
+            pot = self.g_bytes if contended else self.o_bytes
+            pot[meta.tenant] = pot.get(meta.tenant, 0.0) + b
         dur = _duration(i, self.result, self.platform)
         if i in self.startup_idx:
             dur += self.platform.startup_s
@@ -248,19 +300,26 @@ class _SimState:
         if self.result.tenant_of:
             report.tenant_stats = _tenant_stats(
                 self.result, self.end, self.layer_ready,
-                self.arrivals or {}, self.miu_wait)
+                self.arrivals or {}, self.miu_wait,
+                self.miu_bytes, self.g_bytes, self.o_bytes, self.x_bytes)
         return report
 
 
 def simulate(result: CodegenResult, platform: DoraPlatform,
              arrivals: dict[int, float] | None = None,
-             priorities: dict[int, float] | None = None) -> SimReport:
+             priorities: dict[int, float] | None = None,
+             bandwidth_shares: dict[int, float] | None = None) -> SimReport:
     """``arrivals``: tenant index -> arrival time; instructions of a
     tenant never start before it arrives (multi-tenant runs only).
     ``priorities``: tenant index -> weight, consumed by the ``priority``
-    virtual-channel arbitration (ignored otherwise)."""
+    virtual-channel arbitration (ignored otherwise).
+    ``bandwidth_shares``: tenant index -> guaranteed DRAM bandwidth
+    fraction, consumed by the ``wfq`` arbitration (ignored by every
+    other policy; wfq without explicit shares falls back to
+    priority-proportional, then equal, shares)."""
     if platform.vc_count > 1:
-        return _simulate_vc(result, platform, arrivals, priorities)
+        return _simulate_vc(result, platform, arrivals, priorities,
+                            bandwidth_shares)
     return _simulate_inorder(result, platform, arrivals)
 
 
@@ -287,6 +346,13 @@ def _simulate_inorder(result: CodegenResult, platform: DoraPlatform,
                 if ready is None:
                     break
                 st.issue(i, key, ready)
+                m = result.meta[i]
+                if (result.program.instructions[i].op_type in _MIU_OPS
+                        and m.tenant >= 0):
+                    # single in-order queue: the served instruction IS
+                    # the head, so the full entitlement is its tenant's
+                    st.x_bytes[m.tenant] = (st.x_bytes.get(m.tenant, 0.0)
+                                            + float(m.bytes_moved))
                 heads[key] += 1
                 done += 1
                 progressed = True
@@ -302,9 +368,94 @@ def _simulate_inorder(result: CodegenResult, platform: DoraPlatform,
     return st.report()
 
 
+def _channel_shares(result: CodegenResult,
+                    vcq: dict[tuple[UnitKind, int], dict[int, list[int]]],
+                    priorities: dict[int, float],
+                    bandwidth_shares: dict[int, float] | None
+                    ) -> dict[tuple[UnitKind, int], dict[int, float]]:
+    """wfq weighting: resolve per-tenant shares (explicit
+    ``bandwidth_shares``, else priority-proportional, else equal) into
+    per-channel weights — the sum of the shares of the tenants mapped
+    into each channel, so tenants sharing a channel pool their
+    guarantee."""
+    tenants = sorted({m.tenant for m in result.meta if m.tenant >= 0})
+    if bandwidth_shares:
+        for t, s in bandwidth_shares.items():
+            if s <= 0.0:
+                raise ValueError(
+                    f"bandwidth share for tenant {t} must be > 0, got {s}")
+        if sum(bandwidth_shares.values()) > 1.0 + 1e-9:
+            raise ValueError("bandwidth shares sum to "
+                             f"{sum(bandwidth_shares.values()):.6g} > 1")
+        share = {t: bandwidth_shares.get(t, 0.0) for t in tenants}
+        missing = [t for t in tenants if share[t] <= 0.0]
+        if missing:
+            rest = 1.0 - sum(share.values())
+            if rest <= 0.0:
+                raise ValueError(
+                    f"tenants {missing} have no bandwidth share and the "
+                    "explicit shares leave no headroom to split")
+            psum = sum(priorities.get(t, 1.0) for t in missing)
+            for t in missing:
+                share[t] = rest * priorities.get(t, 1.0) / psum
+    elif priorities:
+        psum = sum(priorities.get(t, 1.0) for t in tenants) or 1.0
+        share = {t: priorities.get(t, 1.0) / psum for t in tenants}
+    else:
+        share = {t: 1.0 / max(len(tenants), 1) for t in tenants}
+    weight: dict[tuple[UnitKind, int], dict[int, float]] = {}
+    for k, q in vcq.items():
+        weight[k] = {}
+        for c, idxs in q.items():
+            ts = {result.meta[i].tenant for i in idxs
+                  if result.meta[i].tenant >= 0}
+            weight[k][c] = sum(share[t] for t in ts) if ts else 1.0
+    return weight
+
+
+def _wfq_grant(st: _SimState, key: tuple[UnitKind, int], pool: list,
+               w: dict[int, float], d: dict[int, float],
+               chan_list: dict, rr_ptr: dict) -> tuple[int, int, float]:
+    """One contended weighted-fair grant (DRR-style).
+
+    A channel is *eligible* once its deficit counter covers its head
+    transfer's bytes.  When no contender is eligible, every contending
+    channel's deficit is topped up in proportion to its weight by the
+    minimal amount that makes one eligible — so credit accrues at
+    exactly the share rate and a 1% channel is guaranteed ~1% of the
+    contended bytes, never zero.  Ties resolve by round-robin rotation;
+    the winner's deficit is charged.  Deficits never exceed the head's
+    bytes (the top-up stops at the first eligible channel), so no
+    channel can bank credit and burst later."""
+    bytes_of = {cd[0]: float(st.result.meta[cd[1]].bytes_moved)
+                for cd in pool}
+
+    def _tol(c: int) -> float:
+        return max(1e-9, 1e-12 * bytes_of[c])
+
+    eligible = {c for c in bytes_of if d[c] >= bytes_of[c] - _tol(c)}
+    if not eligible:
+        q = min((bytes_of[c] - d[c]) / w[c] for c in bytes_of)
+        for c in bytes_of:
+            d[c] = min(d[c] + q * w[c], bytes_of[c])
+        eligible = {c for c in bytes_of if d[c] >= bytes_of[c] - _tol(c)}
+    clist = chan_list[key]
+    by_chan = {cd[0]: cd for cd in pool}
+    for off in range(len(clist)):
+        cc = clist[(rr_ptr[key] + off) % len(clist)]
+        if cc in eligible:
+            c, i, _, ready = by_chan[cc]
+            rr_ptr[key] = (clist.index(cc) + 1) % len(clist)
+            d[c] = max(d[c] - bytes_of[c], 0.0)
+            return c, i, ready
+    raise RuntimeError("wfq arbitration found no eligible channel")
+
+
 def _simulate_vc(result: CodegenResult, platform: DoraPlatform,
                  arrivals: dict[int, float] | None,
-                 priorities: dict[int, float] | None) -> SimReport:
+                 priorities: dict[int, float] | None,
+                 bandwidth_shares: dict[int, float] | None = None
+                 ) -> SimReport:
     """The arbitrated machine: MIU queues split into ``vc_count`` virtual
     channels; every other unit stays strictly in order.
 
@@ -333,12 +484,20 @@ def _simulate_vc(result: CodegenResult, platform: DoraPlatform,
     vheads = {k: {c: 0 for c in q} for k, q in vcq.items()}
     chan_list = {k: sorted(q) for k, q in vcq.items()}
     rr_ptr = {k: 0 for k in vcq}
-    # channel weight = max priority among the tenants mapped into it
-    weight = {
-        k: {c: max((priorities.get(result.meta[i].tenant, 1.0)
-                    for i in idxs), default=1.0)
-            for c, idxs in q.items()}
-        for k, q in vcq.items()}
+    # channel weight: max priority among the tenants mapped into the
+    # channel (priority arbitration) or the pooled bandwidth share (wfq)
+    if arb == "wfq":
+        weight = _channel_shares(result, vcq, priorities,
+                                 bandwidth_shares)
+    else:
+        weight = {
+            k: {c: max((priorities.get(result.meta[i].tenant, 1.0)
+                        for i in idxs), default=1.0)
+                if arb == "priority" else 1.0
+                for c, idxs in q.items()}
+            for k, q in vcq.items()}
+    # wfq deficit counters, bytes (see module docstring)
+    deficit = {k: {c: 0.0 for c in q} for k, q in vcq.items()}
 
     done = 0
     n = st.n
@@ -382,7 +541,10 @@ def _simulate_vc(result: CodegenResult, platform: DoraPlatform,
             elif arb == "priority":
                 c, i, _, ready = max(
                     pool, key=lambda cd: (weight[key][cd[0]], -cd[1]))
-            else:   # rr: next channel after the last grant wins
+            elif arb == "wfq" and len(pool) > 1:
+                c, i, ready = _wfq_grant(st, key, pool, weight[key],
+                                         deficit[key], chan_list, rr_ptr)
+            else:   # rr (and an uncontended wfq grant): rotation wins
                 clist = chan_list[key]
                 by_chan = {cd[0]: cd for cd in pool}
                 for off in range(len(clist)):
@@ -391,7 +553,23 @@ def _simulate_vc(result: CodegenResult, platform: DoraPlatform,
                         c, i, _, ready = by_chan[cc]
                         rr_ptr[key] = (clist.index(cc) + 1) % len(clist)
                         break
-            st.issue(i, key, ready)
+            contended = len(pool) > 1
+            if st.result.meta[i].tenant >= 0:
+                # fluid-fair entitlement: every channel with a ready
+                # head at this grant is entitled to its weight's share
+                # of the granted bytes (all of them when alone).  Within
+                # a FIFO channel the guarantee extends to the *head*, so
+                # the entitlement goes to the tenant whose instruction
+                # is at the channel head right now (cd[1]).
+                b = float(st.result.meta[i].bytes_moved)
+                w_pool = sum(weight[key][cd[0]] for cd in pool)
+                for cd in pool:
+                    t_head = st.result.meta[cd[1]].tenant
+                    if t_head >= 0:
+                        st.x_bytes[t_head] = (
+                            st.x_bytes.get(t_head, 0.0)
+                            + b * weight[key][cd[0]] / w_pool)
+            st.issue(i, key, ready, contended=contended)
             vheads[key][c] += 1
             done += 1
             progressed_any = True
@@ -406,7 +584,11 @@ def _simulate_vc(result: CodegenResult, platform: DoraPlatform,
 def _tenant_stats(result: CodegenResult, end: list[float],
                   layer_ready: dict[int, float],
                   arrivals: dict[int, float],
-                  miu_wait: dict[int, float]) -> dict[int, TenantSimStats]:
+                  miu_wait: dict[int, float],
+                  miu_bytes: dict[int, float],
+                  g_bytes: dict[int, float],
+                  o_bytes: dict[int, float],
+                  x_bytes: dict[int, float]) -> dict[int, TenantSimStats]:
     stats: dict[int, TenantSimStats] = {}
     instr_of: dict[int, list[int]] = {}
     for i, m in enumerate(result.meta):
@@ -426,5 +608,9 @@ def _tenant_stats(result: CodegenResult, end: list[float],
         stats[ti] = TenantSimStats(
             tenant=ti, arrival_s=arr, finish_s=finish,
             makespan_s=finish - arr, tail_latency_s=tail,
-            miu_wait_s=miu_wait.get(ti, 0.0), n_instructions=len(idxs))
+            miu_wait_s=miu_wait.get(ti, 0.0), n_instructions=len(idxs),
+            miu_bytes=miu_bytes.get(ti, 0.0),
+            guaranteed_bytes=g_bytes.get(ti, 0.0),
+            opportunistic_bytes=o_bytes.get(ti, 0.0),
+            expected_bytes=x_bytes.get(ti, 0.0))
     return stats

@@ -1,23 +1,36 @@
 """Docs-sync guard: docs/ISA.md is the enforced reference for
 ``core/isa.py`` — every enum member and body field must be documented,
-and every opcode documented must exist — and docs/ARCHITECTURE.md must
-mention every core module.  This is what keeps the docs from rotting
-silently when the ISA or the pipeline changes."""
+and every opcode documented must exist — docs/ARCHITECTURE.md must
+mention every core module, and docs/SCHEDULING.md must name every
+stage-2 engine, arbitration policy, QoS knob, and QoS accounting field
+(plus the benchmark's documented CLI flags must actually exist).  This
+is what keeps the docs from rotting silently when the ISA, the
+pipeline, or the scheduling/QoS contract changes."""
 
+import dataclasses
+import os
 import re
+import subprocess
+import sys
 from pathlib import Path
 
 import pytest
 
+from repro.core.compiler import ENGINES, CompileOptions
 from repro.core.isa import (Body, Epilogue, LMUBody, LmuRole, MIUBody,
                             MMUBody, OpType, SFUBody, UnitKind)
+from repro.core.multi_tenant import QOS_POLICIES
+from repro.core.perf_model import VC_ARBITRATIONS
+from repro.core.simulator import TenantSimStats
 
 pytestmark = pytest.mark.docs
 
-DOCS = Path(__file__).resolve().parents[1] / "docs"
+REPO = Path(__file__).resolve().parents[1]
+DOCS = REPO / "docs"
 ISA_MD = DOCS / "ISA.md"
 ARCH_MD = DOCS / "ARCHITECTURE.md"
-CORE = Path(__file__).resolve().parents[1] / "src" / "repro" / "core"
+SCHED_MD = DOCS / "SCHEDULING.md"
+CORE = REPO / "src" / "repro" / "core"
 
 
 def _code_spans(text: str) -> set[str]:
@@ -86,6 +99,91 @@ def test_architecture_md_covers_every_core_module():
 def test_architecture_md_documents_vc_subsystem():
     text = ARCH_MD.read_text()
     for needle in ("interleave", "virtual channel", "vc_count",
-                   "vc_arbitration"):
+                   "vc_arbitration", "wfq", "bandwidth_shares"):
         assert needle in text.lower() or needle in text, (
             f"docs/ARCHITECTURE.md lost its {needle!r} section")
+
+
+# ------------------------------------------------- SCHEDULING.md sync checks
+
+@pytest.fixture(scope="module")
+def sched_tokens() -> set[str]:
+    assert SCHED_MD.is_file(), "docs/SCHEDULING.md is missing"
+    return _code_spans(SCHED_MD.read_text())
+
+
+def test_scheduling_md_documents_every_engine(sched_tokens):
+    missing = set(ENGINES) - sched_tokens
+    assert not missing, (f"stage-2 engines missing from "
+                         f"docs/SCHEDULING.md: {missing}")
+
+
+def test_scheduling_md_documents_every_arbitration_policy(sched_tokens):
+    missing = set(VC_ARBITRATIONS) - sched_tokens
+    assert not missing, (f"vc_arbitration policies missing from "
+                         f"docs/SCHEDULING.md: {missing}")
+
+
+def test_scheduling_md_documents_every_qos_policy(sched_tokens):
+    missing = set(QOS_POLICIES) - sched_tokens
+    assert not missing, (f"qos policies missing from "
+                         f"docs/SCHEDULING.md: {missing}")
+
+
+def test_scheduling_md_documents_compile_options_knobs(sched_tokens):
+    fields = {f.name for f in dataclasses.fields(CompileOptions)}
+    missing = fields - sched_tokens
+    assert not missing, (f"CompileOptions knobs missing from "
+                         f"docs/SCHEDULING.md: {missing}")
+
+
+def test_scheduling_md_documents_qos_knobs_and_accounting(sched_tokens):
+    knobs = {"bandwidth_shares", "qos", "vc_count", "vc_arbitration",
+             "interleave", "mmu_cap"}
+    stat_fields = {f.name for f in dataclasses.fields(TenantSimStats)
+                   if f.name.endswith("_bytes")}
+    missing = (knobs | stat_fields
+               | {"guaranteed_share_satisfaction"}) - sched_tokens
+    assert not missing, (f"QoS knob/accounting names missing from "
+                         f"docs/SCHEDULING.md: {missing}")
+
+
+def test_scheduling_md_policies_exist_in_code(sched_tokens):
+    """Vice versa: anything SCHEDULING.md's tables present as an
+    arbitration or qos policy must exist in the code (catches renames)."""
+    text = SCHED_MD.read_text()
+    m = re.search(r"`vc_arbitration`[^|]*`VC_ARBITRATIONS`[^|]*?:"
+                  r"((?:\s*`[a-z_]+`\s*\\?\|?)+)", text)
+    assert m, "SCHEDULING.md lost its vc_arbitration policy list"
+    ghosts = set(re.findall(r"`([a-z_]+)`", m.group(1))) \
+        - set(VC_ARBITRATIONS)
+    assert not ghosts, (f"docs/SCHEDULING.md documents nonexistent "
+                        f"arbitration policies: {ghosts}")
+
+
+# ----------------------------------------------- benchmark CLI flag smoke
+
+def test_bench_multi_tenant_help_matches_documented_flags():
+    """The usage examples in the benchmark's docstring (and the README /
+    SCHEDULING.md references) must stay runnable: --help exits 0 and
+    lists every flag the docs mention."""
+    bench = REPO / "benchmarks" / "bench_multi_tenant.py"
+    proc = subprocess.run(
+        [sys.executable, str(bench), "--help"], capture_output=True,
+        text=True, timeout=120,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert proc.returncode == 0, proc.stderr
+    source = bench.read_text()
+    doc = source.split('"""')[1]
+    doc_flags = set(re.findall(r"(--[a-z][a-z-]*)", doc))
+    assert doc_flags, "benchmark docstring lost its usage examples"
+    for flag in doc_flags | {"--qos", "--vc"}:
+        assert flag in proc.stdout, (
+            f"{flag} documented but absent from --help")
+    # and every doc page that names a flag names a real one
+    for page in (SCHED_MD, ARCH_MD):
+        for flag in re.findall(r"`(--[a-z][a-z-]*)`",
+                               page.read_text()):
+            assert flag in proc.stdout, (
+                f"{page.name} documents nonexistent benchmark "
+                f"flag {flag}")
