@@ -7,10 +7,9 @@ from __future__ import annotations
 
 from repro.configs import paper_models
 from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
-                        Policy, build_candidate_table, list_schedule,
+                        Policy, list_schedule,
                         simulate)
 from repro.core.perf_model import enumerate_layer_candidates
-from repro.core.schedule import Schedule
 
 PLAT = DoraPlatform.vck190()
 

@@ -25,10 +25,13 @@ tile-interleaved (``interleave="rr"``) and simulated with
 ``recovered_gap_frac`` is (base - vc makespan) / (base - schedule
 makespan), i.e. the fraction of the head-of-line-blocking loss won back
 (>1 means the simulator beat the analytic schedule bound).  Each sweep
-also reports the *interleave-aware* schedule bound
+also reports three analytic bounds next to the simulator: the engines'
+contiguous-assumption bound, the *interleave-aware* bound
 (``interleave_aware_bound``: MIU transfer times share-scaled during
-cross-tenant overlap) next to the engines' contiguous-assumption bound
-— the aware bound tracks the arbitrated simulator much more closely.
+cross-tenant overlap), and the *oversubscription-aware* bound
+(``oversubscription_aware_bound``: concurrent same-tenant layers
+additionally split their tenant's bandwidth) — each at least as tight
+as the previous one against the arbitrated simulator.
 
 The ``qos_sweep`` rows exercise the weighted-fair (wfq) arbitration on
 a 3-tenant workload with explicit per-tenant ``bandwidth_shares`` and
@@ -38,17 +41,29 @@ the delivered guaranteed-share satisfaction (``miu_bytes /
 expected_bytes``, ~1.0 when the guarantee holds), and the p95 tail
 latency — heavier shares buy visibly shorter tails.
 
+The ``stage1`` rows compare *share-aware* stage-1 DSE
+(``CompileOptions.share_aware_stage1``: every tenant's candidate table
+priced at its guaranteed bandwidth share) against the classic
+full-bandwidth stage 1, per scenario: simulated wfq makespan, total
+DRAM traffic of the chosen modes, and the bound-vs-simulator gaps —
+low-share tenants shift to smaller, less MIU-hungry tiles.
+
 Usage: PYTHONPATH=src python benchmarks/bench_multi_tenant.py
        PYTHONPATH=src python benchmarks/bench_multi_tenant.py --vc 4
        PYTHONPATH=src python benchmarks/bench_multi_tenant.py --qos
+       PYTHONPATH=src python benchmarks/bench_multi_tenant.py \
+           --scenario small_pair --json BENCH_multi_tenant.json
    or: PYTHONPATH=src python -m benchmarks.run multi_tenant
 """
 
 from __future__ import annotations
 
+import json
+
 from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
                         MultiTenantWorkload, Policy, interleave_aware_bound,
-                        interleave_stream, simulate)
+                        interleave_stream, layer_dram_bytes,
+                        oversubscription_aware_bound, simulate)
 from repro.configs import paper_models
 
 PLAT = DoraPlatform.vck190()
@@ -116,6 +131,14 @@ def _solo_baseline(scenario: str, graphs) -> tuple[dict[str, float],
     return _SOLO_CACHE[scenario]
 
 
+def _schedule_dram_bytes(res) -> float:
+    """Total DRAM traffic (bytes) of the committed schedule's chosen
+    modes — the stage-1 footprint a table re-pricing shifts."""
+    return sum(layer_dram_bytes(res.graph.layers[e.layer_id], e.mode.plan,
+                                PLAT, Policy.dora())
+               for e in res.schedule.entries)
+
+
 def run(scenario: str, priority: dict[str, float] | None = None,
         arrival_s: dict[str, float] | None = None) -> dict:
     comp = DoraCompiler(PLAT, Policy.dora())
@@ -149,18 +172,24 @@ def vc_sweep(scenario: str, vcs: tuple[int, ...] = (1, 2, 4),
     simulations; ``base_sim_s`` is today's machine (contiguous stream,
     vc=1).  ``aware_sched_s`` is the interleave-aware schedule bound
     (rr arbitration splits bandwidth evenly, so every tenant's share is
-    priority-proportional — equal here)."""
+    priority-proportional — equal here); ``oversub_sched_s``
+    additionally re-times concurrent same-tenant layers."""
     mt, res = _joint_compile(scenario)
     arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
     prios = {ti: t.priority for ti, t in enumerate(mt.tenants)}
     ilv = interleave_stream(res.codegen, policy="rr", priorities=prios)
 
+    shares = mt.resolve_bandwidth_shares()
     bound = interleave_aware_bound(
         res.schedule, res.graph, PLAT, Policy.dora(), res.tenant_of,
-        mt.resolve_bandwidth_shares(), release=res.release)
+        shares, release=res.release)
+    over = oversubscription_aware_bound(
+        res.schedule, res.graph, PLAT, Policy.dora(), res.tenant_of,
+        shares, release=res.release, interleave_bound=bound)
     out = {
         "sched_s": res.makespan_s,
         "aware_sched_s": bound.makespan_s,
+        "oversub_sched_s": over.makespan_s,
         "base_sim_s": simulate(res.codegen, PLAT,
                                arrivals=arrivals).makespan_s,
         "vc": {},
@@ -176,7 +205,53 @@ def vc_sweep(scenario: str, vcs: tuple[int, ...] = (1, 2, 4),
             # schedule-vs-simulator gap under each analytic bound
             "bound_gap_contig": abs(mk - out["sched_s"]),
             "bound_gap_aware": abs(mk - out["aware_sched_s"]),
+            "bound_gap_oversub": abs(mk - out["oversub_sched_s"]),
         }
+    return out
+
+
+def stage1_cmp(scenario: str, vc: int = 2,
+               shares: dict[str, float] | None = None) -> dict:
+    """Share-aware vs full-bandwidth stage-1 DSE on one scenario, under
+    wfq QoS.  Both variants solve the identical joint problem with the
+    identical shares (explicit when given, else priority-proportional);
+    only the candidate-table pricing differs.  Reports the simulated
+    wfq makespan, the chosen modes' total DRAM traffic, and every
+    analytic bound's gap to the simulator."""
+    graphs = SCENARIOS[scenario]()
+    out = {}
+    for label, sa in (("full_bw", False), ("share_aware", True)):
+        mt = MultiTenantWorkload(scenario, interleave="priority",
+                                 bandwidth_shares=dict(shares)
+                                 if shares else None)
+        for name, g in graphs.items():
+            mt.add_tenant(name, g)
+        comp = DoraCompiler(PLAT, Policy.dora())
+        res = comp.compile(mt, CompileOptions(engine="list", qos="wfq",
+                                              share_aware_stage1=sa))
+        arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
+        rep = simulate(res.codegen, PLAT.with_vc(vc, "wfq"),
+                       arrivals=arrivals,
+                       bandwidth_shares=res.bandwidth_shares)
+        out[label] = {
+            "sched_s": res.makespan_s,
+            "aware_sched_s": res.interleave_aware_makespan_s,
+            "oversub_sched_s": res.oversubscription_aware_makespan_s,
+            "joint_sim_s": rep.makespan_s,
+            "dram_bytes": _schedule_dram_bytes(res),
+            "bound_gap_aware": abs(rep.makespan_s
+                                   - res.interleave_aware_makespan_s),
+            "bound_gap_oversub": abs(rep.makespan_s
+                                     - res.oversubscription_aware_makespan_s),
+            "satisfaction": {
+                mt.tenants[ti].name: rep.tenant_stats[
+                    ti].guaranteed_share_satisfaction
+                for ti in range(len(mt.tenants))},
+        }
+    out["stage1_sim_speedup"] = (out["full_bw"]["joint_sim_s"]
+                                 / out["share_aware"]["joint_sim_s"])
+    out["stage1_dram_bytes_ratio"] = (out["share_aware"]["dram_bytes"]
+                                      / out["full_bw"]["dram_bytes"])
     return out
 
 
@@ -188,7 +263,10 @@ def qos_sweep(scenario: str = "small_trio",
     arbitration.  ``vc_count < n_tenants`` (the first sweep point)
     forces tenants to hash into shared channels and pool their
     guarantees; per tenant we report the configured share, delivered
-    guaranteed-share satisfaction, and p95 tail latency."""
+    guaranteed-share satisfaction, and p95 tail latency.  Stage 1 is
+    pinned to the classic full-bandwidth table here so the sweep stays
+    comparable across PRs — ``stage1_cmp`` reports the share-aware
+    re-pricing side by side."""
     shares = dict(shares or QOS_SHARES)
     graphs = SCENARIOS[scenario]()
     mt = MultiTenantWorkload(scenario, interleave="priority",
@@ -196,12 +274,14 @@ def qos_sweep(scenario: str = "small_trio",
     for name, g in graphs.items():
         mt.add_tenant(name, g)
     comp = DoraCompiler(PLAT, Policy.dora())
-    res = comp.compile(mt, CompileOptions(engine="list", qos="wfq"))
+    res = comp.compile(mt, CompileOptions(engine="list", qos="wfq",
+                                          share_aware_stage1=False))
     arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
 
     out = {
         "sched_s": res.makespan_s,
         "aware_sched_s": res.interleave_aware_makespan_s,
+        "oversub_sched_s": res.oversubscription_aware_makespan_s,
         "base_sim_s": simulate(res.codegen, PLAT,
                                arrivals=arrivals).makespan_s,
         "vc": {},
@@ -214,6 +294,8 @@ def qos_sweep(scenario: str = "small_trio",
                "bound_gap_contig": abs(rep.makespan_s - out["sched_s"]),
                "bound_gap_aware": abs(rep.makespan_s
                                       - out["aware_sched_s"]),
+               "bound_gap_oversub": abs(rep.makespan_s
+                                        - out["oversub_sched_s"]),
                "tenants": {}}
         for ti, t in enumerate(mt.tenants):
             s = rep.tenant_stats[ti]
@@ -228,10 +310,19 @@ def qos_sweep(scenario: str = "small_trio",
     return out
 
 
-def main(emit) -> None:
+def main(emit, scenarios: tuple[str, ...] | None = None,
+         results: dict | None = None) -> dict:
+    """Full benchmark: per-scenario joint-vs-sequential rows, the
+    priority/arrival variants, the vc/qos sweeps, and the stage-1
+    comparison.  ``scenarios`` restricts to a subset (the CI smoke test
+    runs just ``small_pair``); every emitted number is also collected
+    into the returned dict (the ``--json`` artifact)."""
+    selected = tuple(scenarios or SCENARIOS)
+    results = results if results is not None else {}
     rows = {}
-    for scenario in SCENARIOS:
+    for scenario in selected:
         r = rows[scenario] = run(scenario)
+        results.setdefault(scenario, {})["run"] = r
         pre = f"multi_tenant.{scenario}"
         emit(f"{pre}.joint_makespan_s", r["joint_sim_s"],
              "simulator, joint list schedule")
@@ -246,37 +337,72 @@ def main(emit) -> None:
                  f"miu_wait={t['miu_wait_s']:.6g},"
                  f"slowdown_vs_solo={t['slowdown_vs_solo']:.3f}")
 
-    # priority skew: 4x priority shields qwen3-4b from co-tenant slowdown
-    skew = run("llm_pair", priority={"qwen3-4b": 4.0})
-    emit("multi_tenant.llm_pair.prio4.qwen_slowdown",
-         skew["tenants"]["qwen3-4b"]["slowdown_vs_solo"],
-         "qwen3-4b at 4x priority")
-    # staggered arrival: whisper lands mid-flight of qwen
-    offs = run("llm_pair", arrival_s={
-        "whisper-medium": rows["llm_pair"]["solo_sim"]["qwen3-4b"] * 0.5})
-    emit("multi_tenant.llm_pair.staggered.joint_makespan_s",
-         offs["joint_sim_s"],
-         "whisper-medium arrives at 50% of qwen3-4b solo makespan")
+    if "llm_pair" in selected:
+        # priority skew: 4x priority shields qwen3-4b from co-tenant slowdown
+        skew = run("llm_pair", priority={"qwen3-4b": 4.0})
+        emit("multi_tenant.llm_pair.prio4.qwen_slowdown",
+             skew["tenants"]["qwen3-4b"]["slowdown_vs_solo"],
+             "qwen3-4b at 4x priority")
+        results["llm_pair"]["prio4_qwen_slowdown"] = \
+            skew["tenants"]["qwen3-4b"]["slowdown_vs_solo"]
+        # staggered arrival: whisper lands mid-flight of qwen
+        offs = run("llm_pair", arrival_s={
+            "whisper-medium": rows["llm_pair"]["solo_sim"]["qwen3-4b"] * 0.5})
+        emit("multi_tenant.llm_pair.staggered.joint_makespan_s",
+             offs["joint_sim_s"],
+             "whisper-medium arrives at 50% of qwen3-4b solo makespan")
+        results["llm_pair"]["staggered_joint_sim_s"] = offs["joint_sim_s"]
 
     # virtual-channel sweep: interleaved stream, vc_count in {1, 2, 4}
-    for scenario in SCENARIOS:
-        emit_vc_sweep(emit, scenario, vc_sweep(scenario))
+    for scenario in selected:
+        sw = vc_sweep(scenario)
+        results[scenario]["vc_sweep"] = sw
+        emit_vc_sweep(emit, scenario, sw)
+
+    # share-aware vs full-bandwidth stage 1, per scenario (explicit
+    # shares on the trio, priority-proportional elsewhere)
+    for scenario in selected:
+        cmp_row = stage1_cmp(scenario,
+                             shares=QOS_SHARES
+                             if scenario == "small_trio" else None)
+        results[scenario]["stage1"] = cmp_row
+        emit_stage1_cmp(emit, scenario, cmp_row)
 
     # weighted-fair QoS sweep: 3 tenants, explicit shares, wfq MIU
-    emit_qos_sweep(emit, "small_trio", qos_sweep())
+    if "small_trio" in selected:
+        sw = qos_sweep()
+        results["small_trio"]["qos_sweep"] = sw
+        emit_qos_sweep(emit, "small_trio", sw)
+    return results
 
 
 def emit_vc_sweep(emit, scenario: str, sw: dict) -> None:
     pre = f"multi_tenant.{scenario}"
     emit(f"{pre}.vc_sweep.base_joint_makespan_s", sw["base_sim_s"],
          f"contiguous stream, vc=1 (sched bound={sw['sched_s']:.6g}, "
-         f"interleave-aware bound={sw['aware_sched_s']:.6g})")
+         f"interleave-aware bound={sw['aware_sched_s']:.6g}, "
+         f"oversubscription bound={sw['oversub_sched_s']:.6g})")
     for v, row in sw["vc"].items():
         emit(f"{pre}.vc{v}.joint_makespan_s", row["joint_sim_s"],
              f"tile-interleaved rr, {v} MIU VC; recovered_gap_frac="
              f"{row['recovered_gap_frac']:.3f}; bound gap "
              f"contig={row['bound_gap_contig']:.6g} "
-             f"aware={row['bound_gap_aware']:.6g}")
+             f"aware={row['bound_gap_aware']:.6g} "
+             f"oversub={row['bound_gap_oversub']:.6g}")
+
+
+def emit_stage1_cmp(emit, scenario: str, cmp_row: dict) -> None:
+    pre = f"multi_tenant.{scenario}.stage1"
+    for label in ("full_bw", "share_aware"):
+        r = cmp_row[label]
+        emit(f"{pre}.{label}.joint_makespan_s", r["joint_sim_s"],
+             f"wfq sim; sched={r['sched_s']:.6g} "
+             f"aware={r['aware_sched_s']:.6g} "
+             f"oversub={r['oversub_sched_s']:.6g} "
+             f"dram_bytes={r['dram_bytes']:.6g}")
+    emit(f"{pre}.sim_speedup", cmp_row["stage1_sim_speedup"],
+         f"share-aware vs full-bandwidth stage 1 (dram bytes ratio="
+         f"{cmp_row['stage1_dram_bytes_ratio']:.3f})")
 
 
 def emit_qos_sweep(emit, scenario: str, sw: dict) -> None:
@@ -285,13 +411,16 @@ def emit_qos_sweep(emit, scenario: str, sw: dict) -> None:
          "contiguous-assumption stage-2 bound")
     emit(f"{pre}.interleave_aware_bound_s", sw["aware_sched_s"],
          "share-scaled MIU transfer times during cross-tenant overlap")
+    emit(f"{pre}.oversubscription_bound_s", sw["oversub_sched_s"],
+         "concurrent same-tenant layers additionally split their share")
     emit(f"{pre}.base_joint_makespan_s", sw["base_sim_s"],
          "contiguous stream, vc=1")
     for v, row in sw["vc"].items():
         emit(f"{pre}.vc{v}.joint_makespan_s", row["joint_sim_s"],
              f"wfq arbitration; bound gap contig="
              f"{row['bound_gap_contig']:.6g} "
-             f"aware={row['bound_gap_aware']:.6g}")
+             f"aware={row['bound_gap_aware']:.6g} "
+             f"oversub={row['bound_gap_oversub']:.6g}")
         for name, t in row["tenants"].items():
             emit(f"{pre}.vc{v}.{name}.satisfaction", t["satisfaction"],
                  f"share={t['share']:.3g},"
@@ -310,7 +439,18 @@ if __name__ == "__main__":
     ap.add_argument("--qos", action="store_true",
                     help="only run the weighted-fair QoS sweep "
                          "(3 tenants, explicit bandwidth shares, wfq)")
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="restrict the full benchmark to one scenario "
+                         "(the CI smoke test runs small_pair)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump every scenario's makespans, bounds, "
+                         "gap fractions, and share satisfactions as a "
+                         "JSON artifact (the BENCH_multi_tenant.json "
+                         "perf trajectory)")
     args = ap.parse_args()
+    if args.qos and args.scenario:
+        ap.error("--qos runs the fixed small_trio weighted-fair sweep; "
+                 "--scenario cannot be combined with it")
     print("name,value,derived")
 
     def _emit(name, value, derived=""):
@@ -318,11 +458,22 @@ if __name__ == "__main__":
             value = f"{value:.6g}"
         print(f"{name},{value},{derived}")
 
+    results: dict = {}
     if args.qos:
-        emit_qos_sweep(_emit, "small_trio", qos_sweep())
+        sw = qos_sweep()
+        results["small_trio"] = {"qos_sweep": sw}
+        emit_qos_sweep(_emit, "small_trio", sw)
     elif args.vc is not None:
         vcs = (1, args.vc) if args.vc != 1 else (1,)
-        for scenario in SCENARIOS:
-            emit_vc_sweep(_emit, scenario, vc_sweep(scenario, vcs=vcs))
+        for scenario in (args.scenario,) if args.scenario else SCENARIOS:
+            sw = vc_sweep(scenario, vcs=vcs)
+            results[scenario] = {"vc_sweep": sw}
+            emit_vc_sweep(_emit, scenario, sw)
     else:
-        main(_emit)
+        scenarios = (args.scenario,) if args.scenario else None
+        main(_emit, scenarios=scenarios, results=results)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")

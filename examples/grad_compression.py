@@ -16,10 +16,10 @@ import functools  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from jax.experimental.shard_map import shard_map  # noqa: E402
 
-from repro.optim.compression import compressed_psum, ef_quantize  # noqa: E402
+from repro.optim.compression import compressed_psum  # noqa: E402
 
 
 def main() -> None:

@@ -55,7 +55,9 @@ def main() -> None:
     trainer.run()
     ms = trainer.metrics_log
     print(f"\nloss {ms[0]['loss']:.3f} -> {ms[-1]['loss']:.3f} over "
-          f"{len(ms)} steps; mean {sum(m['tokens_per_s'] for m in ms[1:]) / max(len(ms) - 1, 1):,.0f} tok/s; "
+          f"{len(ms)} steps; mean "
+          f"{sum(m['tokens_per_s'] for m in ms[1:]) / max(len(ms) - 1, 1):,.0f}"
+          f" tok/s; "
           f"{trainer.failures} failures recovered; "
           f"{len(trainer.straggler_steps)} straggler steps")
 

@@ -22,7 +22,6 @@ import argparse          # noqa: E402
 import dataclasses       # noqa: E402
 import json              # noqa: E402
 
-import jax               # noqa: E402
 
 from repro.configs import SHAPES, get_config                       # noqa: E402
 from repro.launch.mesh import make_production_mesh                 # noqa: E402

@@ -16,13 +16,14 @@ from .multi_tenant import (QOS_POLICIES, MergedWorkload, MultiTenantWorkload,
 from .partition import PartitionedResult, partitioned_solve, split_segments
 from .perf_model import (VC_ARBITRATIONS, CandidateMode, DoraPlatform, Policy,
                          TilePlan, TpuGemmTiles, build_candidate_table,
-                         enumerate_layer_candidates, layer_latency,
+                         enumerate_layer_candidates, layer_dram_bytes,
+                         layer_latency, mode_dram_demand,
                          mode_latency_at_share, plan_tpu_gemm_tiles,
                          share_scaled_platform, single_pe_efficiency)
 from .runtime import DoraRuntime
-from .schedule import (InterleaveBound, Schedule, ScheduleEntry,
-                       interleave_aware_bound, list_schedule,
-                       sequential_schedule)
+from .schedule import (InterleaveBound, OversubscriptionBound, Schedule,
+                       ScheduleEntry, interleave_aware_bound, list_schedule,
+                       oversubscription_aware_bound, sequential_schedule)
 from .simulator import SimReport, TenantSimStats, simulate
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -45,14 +45,22 @@ def generate_platform(template: ArchTemplate,
 
 def evaluate_template(template: ArchTemplate,
                       graphs: Sequence[WorkloadGraph],
-                      policy: Policy | None = None) -> float:
+                      policy: Policy | None = None,
+                      bandwidth_share: float = 1.0) -> float:
     """Mean makespan over a model set under a fast list schedule — the
-    fitness used by the architecture search."""
+    fitness used by the architecture search.
+
+    ``bandwidth_share`` prices every candidate table at that fraction of
+    the DRAM bandwidth (share-aware stage 1): searching a template for a
+    multi-tenant deployment should size it for the bandwidth each
+    resident workload is actually guaranteed, not the full-bandwidth
+    solo assumption."""
     policy = policy or Policy.dora()
     platform = generate_platform(template)
     total = 0.0
     for g in graphs:
-        cands = build_candidate_table(g, platform, policy)
+        cands = build_candidate_table(g, platform, policy,
+                                      bandwidth_share=bandwidth_share)
         total += list_schedule(g, cands, platform).makespan
     return total / max(len(graphs), 1)
 
@@ -62,6 +70,7 @@ def search_template(graphs: Sequence[WorkloadGraph],
                     lmu_options: Sequence[int] = (8, 14, 20),
                     sfu_options: Sequence[int] = (1, 3),
                     area_budget: float | None = 600.0,
+                    bandwidth_share: float = 1.0,
                     ) -> tuple[ArchTemplate, float]:
     best: tuple[ArchTemplate, float] | None = None
     for nm in mmu_options:
@@ -70,7 +79,8 @@ def search_template(graphs: Sequence[WorkloadGraph],
                 t = ArchTemplate(nm, nl, ns)
                 if area_budget is not None and t.resource_cost() > area_budget:
                     continue
-                score = evaluate_template(t, graphs)
+                score = evaluate_template(t, graphs,
+                                          bandwidth_share=bandwidth_share)
                 if best is None or score < best[1]:
                     best = (t, score)
     assert best is not None

@@ -28,7 +28,6 @@ The emission order (and the full ISA) is documented in docs/ISA.md;
 
 from __future__ import annotations
 
-import enum
 from dataclasses import dataclass, field
 
 from .graph import LayerKind, NonLinear, WorkloadGraph

@@ -16,7 +16,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .codegen import CodegenResult, generate
-from .ga import GAConfig, GAResult, GAScheduler
+from .ga import GAConfig, GAScheduler
 from .graph import WorkloadGraph
 from .interleave import POLICIES as INTERLEAVE_POLICIES
 from .milp import MilpScheduler, SolveResult
@@ -25,8 +25,9 @@ from .partition import partitioned_solve
 from .perf_model import (CandidateMode, DoraPlatform, Policy,
                          build_candidate_table)
 from .runtime import DoraRuntime, MatmulFn
-from .schedule import (InterleaveBound, Schedule, interleave_aware_bound,
-                       list_schedule, sequential_schedule)
+from .schedule import (InterleaveBound, OversubscriptionBound, Schedule,
+                       interleave_aware_bound, list_schedule,
+                       oversubscription_aware_bound, sequential_schedule)
 from .simulator import SimReport, simulate
 
 # stage-2 engines (docs-synced by tests/test_docs.py)
@@ -45,11 +46,20 @@ class CompileOptions:
     interleave: str | None = None
     # multi-tenant QoS: "wfq" resolves per-tenant bandwidth shares
     # (MultiTenantWorkload.bandwidth_shares, else priority-proportional),
-    # computes the interleave-aware schedule bound, and makes
-    # DoraCompiler.simulate feed the shares to the wfq arbitration.
-    # "none" disables; None defers to the workload ("wfq" iff it carries
-    # explicit bandwidth_shares).
+    # computes the interleave-aware + oversubscription-aware schedule
+    # bounds, and makes DoraCompiler.simulate feed the shares to the wfq
+    # arbitration.  "none" disables; None defers to the workload ("wfq"
+    # iff it carries explicit bandwidth_shares).
     qos: str | None = None
+    # share-aware stage 1: price every tenant's candidate table at its
+    # resolved bandwidth share (perf_model.build_candidate_table
+    # layer_shares) instead of the full-bandwidth contiguous assumption,
+    # so latency/dominance pruning and the engines' mode selection see
+    # the bandwidth each tenant is actually guaranteed.  Requires qos to
+    # resolve to "wfq"; None defers to the workload's own
+    # ``share_aware_stage1`` (default: on iff the workload carries
+    # explicit bandwidth_shares).
+    share_aware_stage1: bool | None = None
 
 
 @dataclass
@@ -72,6 +82,10 @@ class CompileResult:
     # QoS compilations only (CompileOptions.qos resolved to "wfq"):
     bandwidth_shares: dict[int, float] = field(default_factory=dict)
     qos_bound: InterleaveBound | None = None
+    oversubscription_bound: OversubscriptionBound | None = None
+    # True when stage 1 priced each tenant's candidate table at its
+    # resolved bandwidth share (CompileOptions.share_aware_stage1):
+    share_aware_stage1: bool = False
 
     @property
     def makespan_s(self) -> float:
@@ -85,6 +99,16 @@ class CompileResult:
         if self.qos_bound is not None:
             return self.qos_bound.makespan_s
         return self.makespan_s
+
+    @property
+    def oversubscription_aware_makespan_s(self) -> float:
+        """The oversubscription-aware schedule bound when QoS was
+        resolved (same-tenant concurrent layers additionally split
+        their tenant's bandwidth), else the interleave-aware bound /
+        contiguous makespan fallback chain."""
+        if self.oversubscription_bound is not None:
+            return self.oversubscription_bound.makespan_s
+        return self.interleave_aware_makespan_s
 
     def per_tenant_makespan(self) -> dict[str, float]:
         """Tenant name -> completion of its last layer minus its
@@ -155,10 +179,26 @@ class DoraCompiler:
                     "qos='wfq' requires a MultiTenantWorkload (bandwidth "
                     "shares are per-tenant guarantees)")
             shares = mt_workload.resolve_bandwidth_shares()
+        share_aware = options.share_aware_stage1
+        if share_aware is None and mt_workload is not None:
+            share_aware = mt_workload.share_aware_stage1
+        if share_aware is None:
+            # default: a workload that pinned explicit guarantees wants
+            # its tables priced at them; priority-proportional wfq keeps
+            # the classic full-bandwidth stage 1 unless asked
+            share_aware = (qos == "wfq" and mt_workload is not None
+                           and mt_workload.bandwidth_shares is not None)
+        if share_aware and not shares:
+            raise ValueError(
+                "share_aware_stage1 requires resolved bandwidth shares "
+                "(a MultiTenantWorkload compiled with qos='wfq')")
 
         t0 = time.perf_counter()
+        layer_shares = ({lid: shares[ti] for lid, ti in tenant_of.items()}
+                        if share_aware else None)
         candidates = build_candidate_table(graph, self.platform, self.policy,
-                                           max_mmu=mmu_cap)
+                                           max_mmu=mmu_cap,
+                                           layer_shares=layer_shares)
         t1 = time.perf_counter()
 
         trace: list[tuple[float, float]] = []
@@ -204,10 +244,14 @@ class DoraCompiler:
 
         schedule.validate(graph, self.platform, release=release)
         qos_bound = None
+        oversub_bound = None
         if shares:
             qos_bound = interleave_aware_bound(
                 schedule, graph, self.platform, self.policy, tenant_of,
                 shares, release=release)
+            oversub_bound = oversubscription_aware_bound(
+                schedule, graph, self.platform, self.policy, tenant_of,
+                shares, release=release, interleave_bound=qos_bound)
         ilv_prios = None
         if mt_workload is not None:
             # the priority interleave weights channels by the guaranteed
@@ -222,7 +266,8 @@ class DoraCompiler:
         return CompileResult(graph, self.platform, self.policy, candidates,
                              schedule, cg, t1 - t0, t2 - t1, t3 - t2,
                              trace, optimal, mt_workload, tenant_of, release,
-                             shares, qos_bound)
+                             shares, qos_bound, oversub_bound,
+                             share_aware_stage1=bool(share_aware))
 
     # -------------------------------------------------------------- backends
     def execute(self, result: CompileResult,

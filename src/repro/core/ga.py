@@ -8,6 +8,13 @@ A dependency-aware decoder (the serial SGS in schedule.py) turns any
 chromosome into a *feasible* schedule, so crossover/mutation never
 produce invalid individuals. Fitness = makespan. The solver records a
 (elapsed_seconds, best_makespan) trace for the Fig. 12 comparisons.
+
+The engine consumes the stage-1 candidate table as-is: under
+share-aware stage 1 (``CompileOptions.share_aware_stage1``) every
+``CandidateMode.latency_s`` it prices fitness with is already scaled to
+the layer's tenant bandwidth share, so the evolved mode genes select
+tiles sized for the bandwidth each tenant is actually guaranteed — no
+GA-side change is needed.
 """
 
 from __future__ import annotations

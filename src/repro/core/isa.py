@@ -24,7 +24,6 @@ All encode/decode paths are exercised by hypothesis round-trip tests.
 
 from __future__ import annotations
 
-import dataclasses
 import enum
 import struct
 from dataclasses import dataclass, field

@@ -13,6 +13,12 @@ time. Two admissible lower bounds prune the tree:
   LB-cp : critical path of the remaining DAG at per-layer min latency
   LB-res: per-unit-class workload bound, sum(lat*units)/capacity
 
+Like the GA, the engine consumes the stage-1 candidate table as-is:
+under share-aware stage 1 every ``CandidateMode.latency_s`` feeding the
+branch-and-bound (and both lower bounds LB-cp / LB-res) is already
+priced at the layer's tenant bandwidth share, so the search optimizes
+the makespan each tenant can actually achieve under its QoS guarantee.
+
 The solver is *anytime*: it keeps an incumbent and a trace of
 (elapsed_seconds, best_makespan) improvements, matching how the paper
 plots MILP progress under a time budget (Fig. 12). On small DAGs it

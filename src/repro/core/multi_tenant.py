@@ -91,6 +91,15 @@ class MultiTenantWorkload:
     Setting it makes ``CompileOptions.qos`` default to "wfq"; leaving
     it None makes QoS fall back to priority-proportional shares when
     explicitly enabled.
+
+    ``share_aware_stage1`` is the stage-1 pricing knob: True prices each
+    tenant's candidate table at its resolved bandwidth share
+    (``build_candidate_table`` ``layer_shares``) so low-share tenants
+    shift to smaller, less MIU-hungry tiles; False forces the classic
+    full-bandwidth table; None (default) defers — on iff explicit
+    ``bandwidth_shares`` are set and QoS resolves to "wfq".  A
+    ``CompileOptions.share_aware_stage1`` value overrides it per
+    compile.
     """
 
     name: str
@@ -98,6 +107,7 @@ class MultiTenantWorkload:
     mmu_cap: int | None = None
     interleave: str = "none"
     bandwidth_shares: dict[str, float] | None = None
+    share_aware_stage1: bool | None = None
 
     def add_tenant(self, name: str, graph: WorkloadGraph,
                    priority: float = 1.0,

@@ -20,8 +20,7 @@ Two policy axes reproduce the paper's comparisons:
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from functools import lru_cache
 
 from .graph import Layer, LayerKind, WorkloadGraph
@@ -216,7 +215,12 @@ class TilePlan:
 
 @dataclass(frozen=True)
 class CandidateMode:
-    """One row of the candidate execution table (paper Fig. 8b)."""
+    """One row of the candidate execution table (paper Fig. 8b).
+
+    ``priced_share`` records the effective DRAM-bandwidth fraction the
+    mode's ``latency_s`` was priced at (share-aware stage 1 prices a
+    tenant's rows at its guaranteed share; 1.0 = the classic
+    full-bandwidth table)."""
 
     layer_id: int
     mode_id: int
@@ -225,6 +229,7 @@ class CandidateMode:
     n_sfu: int
     latency_s: float
     plan: TilePlan | None = None
+    priced_share: float = 1.0
 
     def dominates(self, other: "CandidateMode") -> bool:
         return (self.n_lmu <= other.n_lmu and self.n_mmu <= other.n_mmu
@@ -385,6 +390,60 @@ def mode_latency_at_share(layer: Layer, mode: "CandidateMode",
                          n_sfu=mode.n_sfu)
 
 
+def layer_dram_bytes(layer: Layer, plan: TilePlan | None,
+                     platform: DoraPlatform, policy: Policy) -> float:
+    """Total DRAM traffic (bytes) one layer moves under one tile plan —
+    the numerator of the layer's average bandwidth demand.  Mirrors the
+    per-iteration traffic terms of ``layer_latency`` (operands streamed
+    every on-chip iteration, OUT written once per (m, n) iteration); NL
+    layers read and write their tensor once."""
+    if layer.kind is LayerKind.NL or plan is None:
+        return 2.0 * layer.M * layer.N * platform.dtype_bytes
+
+    M, K, N = layer.M, layer.K, layer.N
+    if not policy.flexible_memory:
+        g = policy.buffer_granularity
+        M, K, N = round_up(M, g), round_up(K, g), round_up(N, g)
+    lm = min(plan.lmu_m, round_up(M, plan.launch_m))
+    lk = min(plan.lmu_k, round_up(K, plan.launch_k))
+    ln = min(plan.lmu_n, round_up(N, plan.launch_n))
+    k_iters = ceil_div(K, lk)
+    iters = ceil_div(M, lm) * k_iters * ceil_div(N, ln)
+    per_iter = ((lm * lk + lk * ln) * platform.dtype_bytes
+                + lm * ln * platform.dtype_bytes / k_iters)
+    # a fused non-linearity stays on chip with an SFU (candidate modes
+    # always grant one), so it adds no DRAM round trip here
+    return iters * per_iter
+
+
+def mode_dram_demand(layer: Layer, mode: "CandidateMode",
+                     platform: DoraPlatform, policy: Policy) -> float:
+    """Average DRAM bandwidth demand (fraction of ``dram_bw_bytes``)
+    while the mode runs at full speed: total traffic over the mode's
+    full-bandwidth latency.  Used by the oversubscription-aware bound to
+    split a tenant's bandwidth among its *concurrent* layers in
+    proportion to what each actually pulls.
+
+    Always re-derived on the *physical* platform — ``mode.latency_s``
+    may be share-priced (share-aware stage 1), and a share-priced
+    denominator would understate the demand by up to the priced-share
+    factor.  NL candidates carry no plan; ``layer_latency``'s NL branch
+    ignores the plan, so a placeholder is enough to re-price them."""
+    if mode.plan is not None:
+        lat = layer_latency(layer, mode.plan, platform, policy,
+                            n_sfu=mode.n_sfu)
+    elif layer.kind is LayerKind.NL:
+        lat = layer_latency(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
+                                            layer.N, 1, 0, 1),
+                            platform, policy, n_sfu=mode.n_sfu)
+    else:
+        lat = mode.latency_s
+    if lat <= 0.0:
+        return 0.0
+    bytes_total = layer_dram_bytes(layer, mode.plan, platform, policy)
+    return min(1.0, bytes_total / lat / platform.dram_bw_bytes)
+
+
 # ---------------------------------------------------------------------------
 # Stage-1 enumeration: candidate execution table
 # ---------------------------------------------------------------------------
@@ -423,7 +482,8 @@ def _mmu_grid_options(n_mmu: int, policy: Policy,
 def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                                policy: Policy,
                                max_modes: int = 12,
-                               max_mmu: int | None = None
+                               max_mmu: int | None = None,
+                               bandwidth_share: float = 1.0
                                ) -> list[CandidateMode]:
     """Build the candidate table rows for one layer: Pareto-optimal
     (resources -> latency) execution modes (paper Fig. 8b).
@@ -431,14 +491,29 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
     ``max_mmu`` caps the MMUs any single mode may claim — the
     multi-tenant fairness knob: with several tenants resident, capping
     per-layer parallelism keeps units available for co-scheduled
-    tenants instead of letting one layer monopolize the array."""
+    tenants instead of letting one layer monopolize the array.
+
+    ``bandwidth_share`` prices every row at the DRAM bandwidth the
+    layer's tenant is *guaranteed* under weighted-fair QoS
+    (``share_scaled_platform``) instead of the full-bandwidth
+    contiguous assumption: latency pricing, dominance pruning, and the
+    per-grid argmin all see the share-scaled DRAM term, so a low-share
+    tenant's table shifts toward smaller, less MIU-hungry tiles.
+    Capacity checks (LMU/PE memory fits) are share-independent and stay
+    on the physical platform.  ``bandwidth_share=1.0`` reproduces the
+    classic table bit for bit."""
+    if not 0.0 < bandwidth_share <= 1.0:
+        raise ValueError(
+            f"bandwidth_share must be in (0, 1], got {bandwidth_share}")
+    pricing = platform if bandwidth_share >= 1.0 else \
+        share_scaled_platform(platform, bandwidth_share)
     if layer.kind is LayerKind.NL:
         lmus, _ = _operand_lmus(layer.M, layer.N, platform, policy)
         lat = layer_latency(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
-                                            layer.N, 1, 0, 1), platform,
+                                            layer.N, 1, 0, 1), pricing,
                             policy, n_sfu=1)
         return [CandidateMode(layer.id, 0, min(lmus, platform.n_lmu), 0, 1,
-                              lat, None)]
+                              lat, None, priced_share=bandwidth_share)]
 
     M, K, N = layer.M, layer.K, layer.N
     needs_sfu = layer.nonlinear is not None
@@ -470,11 +545,12 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                             continue
                         plan = TilePlan(am, ak, an, gm, gn, lm, lk, ln,
                                         l_lhs, l_rhs, l_out, l_nl)
-                        lat = layer_latency(layer, plan, platform, policy,
+                        lat = layer_latency(layer, plan, pricing, policy,
                                             n_sfu=1 if needs_sfu else 0)
                         cand = CandidateMode(layer.id, -1, n_lmu_used,
                                              n_mmu_used,
-                                             1 if needs_sfu else 0, lat, plan)
+                                             1 if needs_sfu else 0, lat, plan,
+                                             priced_share=bandwidth_share)
                         if (best_for_grid is None
                                 or cand.latency_s < best_for_grid.latency_s
                                 or (cand.latency_s == best_for_grid.latency_s
@@ -493,22 +569,35 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
 
 
 def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
-                          policy: Policy, max_mmu: int | None = None
+                          policy: Policy, max_mmu: int | None = None,
+                          bandwidth_share: float = 1.0,
+                          layer_shares: dict[int, float] | None = None
                           ) -> dict[int, list[CandidateMode]]:
     """Stage-1 output: layer id -> candidate modes (paper Fig. 6/8).
 
     ``max_mmu`` (multi-tenant): per-layer MMU ceiling, see
-    enumerate_layer_candidates."""
+    enumerate_layer_candidates.
+
+    Share-aware stage 1 (QoS): ``bandwidth_share`` prices every layer's
+    rows at that fraction of the DRAM bandwidth; ``layer_shares``
+    overrides it per layer (the compiler passes each joint layer its
+    tenant's resolved guarantee, so every tenant's table is priced at
+    the bandwidth it will actually receive under wfq arbitration).  The
+    defaults reproduce the classic full-bandwidth table bit for bit."""
     table: dict[int, list[CandidateMode]] = {}
     cache: dict[tuple, list[CandidateMode]] = {}
+    layer_shares = layer_shares or {}
     for layer in graph.topo_order():
-        key = (layer.kind, layer.M, layer.K, layer.N, layer.nonlinear)
+        share = layer_shares.get(layer.id, bandwidth_share)
+        key = (layer.kind, layer.M, layer.K, layer.N, layer.nonlinear,
+               share)
         if key in cache:
             table[layer.id] = [replace(c, layer_id=layer.id)
                                for c in cache[key]]
             continue
         cands = enumerate_layer_candidates(layer, platform, policy,
-                                           max_mmu=max_mmu)
+                                           max_mmu=max_mmu,
+                                           bandwidth_share=share)
         if not cands:
             raise ValueError(f"no feasible candidate for layer {layer.name} "
                              f"({layer.M}x{layer.K}x{layer.N}) on {platform.name}")

@@ -19,7 +19,7 @@ from dataclasses import dataclass, field
 
 from .graph import WorkloadGraph
 from .perf_model import (CandidateMode, DoraPlatform, Policy,
-                         mode_latency_at_share)
+                         mode_dram_demand, mode_latency_at_share)
 
 
 @dataclass(frozen=True)
@@ -265,10 +265,7 @@ def interleave_aware_bound(schedule: Schedule, graph: WorkloadGraph,
             covered += cur_e - cur_s
         return covered / dur
 
-    deps = {l.id: l.deps for l in graph.layers}
-    unit_free: dict[tuple[str, int], float] = {}
-    finish: dict[int, float] = {}
-    tenant_finish: dict[int, float] = {}
+    durations: dict[int, float] = {}
     for e in entries:
         t = tenant_of.get(e.layer_id, -1)
         frac = _foreign_frac(e, t)
@@ -279,10 +276,34 @@ def interleave_aware_bound(schedule: Schedule, graph: WorkloadGraph,
             scaled = mode_latency_at_share(layer, e.mode, platform,
                                            policy, share)
             dur = dur + frac * max(scaled - dur, 0.0)
-        # anchor at the engine's own start: the replay may only delay
-        # (inflation propagating through deps/units), never compress a
-        # gap the engine chose to leave — this keeps the re-timed bound
-        # monotonically >= the contiguous bound for every engine
+        durations[e.layer_id] = dur
+    finish, tenant_finish = _replay_inflated(entries, graph, tenant_of,
+                                             durations, release)
+    return InterleaveBound(
+        makespan_s=max(finish.values(), default=0.0),
+        contiguous_makespan_s=schedule.makespan,
+        tenant_finish_s=tenant_finish,
+        layer_end_s=finish)
+
+
+def _replay_inflated(entries: list[ScheduleEntry], graph: WorkloadGraph,
+                     tenant_of: dict[int, int],
+                     durations: dict[int, float],
+                     release: dict[int, float]
+                     ) -> tuple[dict[int, float], dict[int, float]]:
+    """Replay the committed placements in the engine's commit order with
+    per-layer inflated durations, propagating the inflation through
+    precedence and unit exclusivity.  Each entry is anchored at the
+    engine's own start, so the replay may only delay — never compress a
+    gap the engine chose to leave — keeping every re-timed bound
+    monotonically >= the contiguous bound (and monotone in the supplied
+    durations, which is what makes the oversubscription bound >= the
+    interleave-aware one)."""
+    unit_free: dict[tuple[str, int], float] = {}
+    finish: dict[int, float] = {}
+    tenant_finish: dict[int, float] = {}
+    deps = {l.id: l.deps for l in graph.layers}
+    for e in entries:
         t0 = max((finish[d] for d in deps[e.layer_id]),
                  default=0.0)
         t0 = max(t0, release.get(e.layer_id, 0.0), e.start)
@@ -290,16 +311,149 @@ def interleave_aware_bound(schedule: Schedule, graph: WorkloadGraph,
                           ("sfu", e.sfu_ids)):
             for uid in ids:
                 t0 = max(t0, unit_free.get((kind, uid), 0.0))
-        end = t0 + dur
+        end = t0 + durations[e.layer_id]
         finish[e.layer_id] = end
         for kind, ids in (("lmu", e.lmu_ids), ("mmu", e.mmu_ids),
                           ("sfu", e.sfu_ids)):
             for uid in ids:
                 unit_free[(kind, uid)] = end
+        t = tenant_of.get(e.layer_id, -1)
         if t >= 0:
             tenant_finish[t] = max(tenant_finish.get(t, 0.0), end)
-    return InterleaveBound(
+    return finish, tenant_finish
+
+
+# ---------------------------------------------------------------------------
+# Oversubscription-aware schedule bound (same-tenant MIU concurrency)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OversubscriptionBound:
+    """Re-timed analytic makespan under the oversubscription-aware
+    transfer model: cross-tenant overlap shrinks a layer's bandwidth to
+    its tenant's guaranteed share (as in ``InterleaveBound``) *and*
+    concurrent same-tenant layers split whatever their tenant has."""
+
+    makespan_s: float                 # oversubscription-aware bound
+    interleave_aware_makespan_s: float  # foreign-overlap-only re-timing
+    contiguous_makespan_s: float      # the engine's original bound
+    tenant_finish_s: dict[int, float] = field(default_factory=dict)
+    layer_end_s: dict[int, float] = field(default_factory=dict)
+
+
+def oversubscription_aware_bound(schedule: Schedule, graph: WorkloadGraph,
+                                 platform: DoraPlatform, policy: Policy,
+                                 tenant_of: dict[int, int],
+                                 shares: dict[int, float],
+                                 release: dict[int, float] | None = None,
+                                 interleave_bound: InterleaveBound | None
+                                 = None) -> OversubscriptionBound:
+    """Close the residual ``interleave_aware_bound`` deliberately leaves
+    open: windows where *one* tenant has k concurrent MIU-active layers
+    (the llm_pair residual — intra-tenant DRAM serialization).
+
+    The interleave-aware bound re-prices a layer only while *foreign*
+    tenants overlap it, at the tenant's guaranteed share; concurrent
+    layers of the same tenant are assumed to stream for free.  On a
+    DRAM-bound workload they cannot: k co-resident tile loops of one
+    tenant split that tenant's bandwidth among themselves.  This bound
+    partitions every entry's interval at the start/end events of all
+    overlapping entries and, per elementary window, re-prices the entry
+    at the bandwidth a fluid-fair MIU would actually grant it:
+
+      - available to the tenant: its guaranteed share while any foreign
+        tenant is resident, the full bandwidth while alone;
+      - split among the tenant's k concurrent layers in proportion to
+        each layer's average demand (``perf_model.mode_dram_demand``) —
+        work-conserving: a layer is never priced below the bandwidth its
+        siblings leave unclaimed;
+      - windows at effective share 1 (alone, or siblings demand less
+        than the headroom) cost nothing extra.
+
+    Durations inflate window-by-window toward ``mode_latency_at_share``
+    and replay through precedence and unit exclusivity exactly like the
+    interleave-aware bound.  Every window's effective share is <= the
+    share the interleave-aware bound would use there, and the replay is
+    monotone in durations, so the result is always >= the
+    interleave-aware bound (and therefore >= the contiguous one); it
+    remains a first-order analytic bound, not a simulation.
+
+    ``interleave_bound``: pass an already-computed
+    ``interleave_aware_bound`` of the same schedule/shares to skip
+    recomputing it (the compiler computes both per QoS compile).
+    """
+    release = release or {}
+    entries = sorted(schedule.entries, key=lambda e: (e.start, e.layer_id))
+    ilv = interleave_bound if interleave_bound is not None else \
+        interleave_aware_bound(schedule, graph, platform, policy,
+                               tenant_of, shares, release=release)
+    layers = {l.id: l for l in graph.layers}
+    demand_cache: dict[int, float] = {}
+
+    def _demand(e: ScheduleEntry) -> float:
+        if e.layer_id not in demand_cache:
+            demand_cache[e.layer_id] = mode_dram_demand(
+                layers[e.layer_id], e.mode, platform, policy)
+        return demand_cache[e.layer_id]
+
+    durations: dict[int, float] = {}
+    for e in entries:
+        dur = e.end - e.start
+        if dur <= 0.0:
+            durations[e.layer_id] = dur
+            continue
+        t = tenant_of.get(e.layer_id, -1)
+        s_t = shares.get(t, 1.0)
+        overlapping = [f for f in entries
+                       if f is not e and f.start < e.end - 1e-18
+                       and f.end > e.start + 1e-18]
+        if not overlapping:
+            durations[e.layer_id] = dur
+            continue
+        cuts = {e.start, e.end}
+        for f in overlapping:
+            cuts.add(min(max(f.start, e.start), e.end))
+            cuts.add(min(max(f.end, e.start), e.end))
+        bounds = sorted(cuts)
+        window_frac: dict[float, float] = {}
+        for a, b in zip(bounds, bounds[1:]):
+            if b - a <= 0.0:
+                continue
+            mid = 0.5 * (a + b)
+            same = [f for f in overlapping
+                    if f.start <= mid < f.end
+                    and tenant_of.get(f.layer_id, -1) == t]
+            foreign = any(f.start <= mid < f.end
+                          and tenant_of.get(f.layer_id, -1) != t
+                          for f in overlapping)
+            avail = s_t if foreign else 1.0
+            if not same:
+                share_w = avail
+            else:
+                d_e = _demand(e)
+                sum_d = d_e + sum(_demand(f) for f in same)
+                if sum_d <= 0.0:
+                    share_w = avail
+                else:
+                    prop = avail * d_e / sum_d
+                    leftover = avail - (sum_d - d_e)
+                    share_w = min(avail, max(prop, leftover))
+            share_w = min(max(share_w, 1e-9), 1.0)
+            if share_w < 1.0:
+                window_frac[share_w] = window_frac.get(share_w, 0.0) \
+                    + (b - a) / dur
+        layer = layers[e.layer_id]
+        inflated = dur
+        for share_w, frac in window_frac.items():
+            scaled = mode_latency_at_share(layer, e.mode, platform,
+                                           policy, share_w)
+            inflated += frac * max(scaled - dur, 0.0)
+        durations[e.layer_id] = inflated
+    finish, tenant_finish = _replay_inflated(entries, graph, tenant_of,
+                                             durations, release)
+    return OversubscriptionBound(
         makespan_s=max(finish.values(), default=0.0),
+        interleave_aware_makespan_s=ilv.makespan_s,
         contiguous_makespan_s=schedule.makespan,
         tenant_finish_s=tenant_finish,
         layer_end_s=finish)

@@ -9,12 +9,10 @@ tile plans (DORA's candidate table driving Pallas BlockSpecs), and
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention_pallas

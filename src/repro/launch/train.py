@@ -30,7 +30,6 @@ import time
 from dataclasses import dataclass
 
 import jax
-import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config

@@ -9,7 +9,7 @@ every-2nd-layer MoE of llama4/jamba scan over homogeneous super-blocks.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

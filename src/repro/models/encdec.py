@@ -13,7 +13,6 @@ cached (standard enc-dec serving).
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 

@@ -139,12 +139,22 @@ def test_scheduling_md_documents_compile_options_knobs(sched_tokens):
 
 def test_scheduling_md_documents_qos_knobs_and_accounting(sched_tokens):
     knobs = {"bandwidth_shares", "qos", "vc_count", "vc_arbitration",
-             "interleave", "mmu_cap"}
+             "interleave", "mmu_cap", "share_aware_stage1"}
     stat_fields = {f.name for f in dataclasses.fields(TenantSimStats)
                    if f.name.endswith("_bytes")}
     missing = (knobs | stat_fields
                | {"guaranteed_share_satisfaction"}) - sched_tokens
     assert not missing, (f"QoS knob/accounting names missing from "
+                         f"docs/SCHEDULING.md: {missing}")
+
+
+def test_scheduling_md_documents_both_bounds(sched_tokens):
+    """The bound chain the docs promise must name the real symbols."""
+    needed = {"interleave_aware_bound", "oversubscription_aware_bound",
+              "OversubscriptionBound", "mode_dram_demand",
+              "oversubscription_aware_makespan_s", "priced_share"}
+    missing = needed - sched_tokens
+    assert not missing, (f"schedule-bound symbols missing from "
                          f"docs/SCHEDULING.md: {missing}")
 
 
@@ -177,7 +187,7 @@ def test_bench_multi_tenant_help_matches_documented_flags():
     doc = source.split('"""')[1]
     doc_flags = set(re.findall(r"(--[a-z][a-z-]*)", doc))
     assert doc_flags, "benchmark docstring lost its usage examples"
-    for flag in doc_flags | {"--qos", "--vc"}:
+    for flag in doc_flags | {"--qos", "--vc", "--json", "--scenario"}:
         assert flag in proc.stdout, (
             f"{flag} documented but absent from --help")
     # and every doc page that names a flag names a real one
@@ -187,3 +197,38 @@ def test_bench_multi_tenant_help_matches_documented_flags():
             assert flag in proc.stdout, (
                 f"{page.name} documents nonexistent benchmark "
                 f"flag {flag}")
+
+
+# ----------------------------------------------- bench perf artifact sync
+
+def test_bench_artifact_seed_is_valid():
+    """BENCH_multi_tenant.json (the committed perf trajectory seed that
+    CI regenerates for the smoke scenario and uploads) must parse and
+    carry the rows the docs and the share-aware-stage-1 acceptance
+    criteria point at."""
+    import json
+
+    bench_json = REPO / "BENCH_multi_tenant.json"
+    assert bench_json.is_file(), "BENCH_multi_tenant.json seed is missing"
+    data = json.loads(bench_json.read_text())
+    assert data, "bench artifact is empty"
+    for scenario, rows in data.items():
+        sweep = rows.get("vc_sweep")
+        assert sweep, f"{scenario}: vc_sweep rows missing"
+        for key in ("sched_s", "aware_sched_s", "oversub_sched_s",
+                    "base_sim_s"):
+            assert key in sweep, f"{scenario}: vc_sweep lost {key}"
+        # bound chain: contiguous <= interleave-aware <= oversubscription
+        assert sweep["sched_s"] <= sweep["aware_sched_s"] + 1e-15
+        assert sweep["aware_sched_s"] <= sweep["oversub_sched_s"] + 1e-15
+        st = rows.get("stage1")
+        assert st, f"{scenario}: stage1 comparison rows missing"
+        for label in ("full_bw", "share_aware"):
+            assert "joint_sim_s" in st[label], (
+                f"{scenario}: stage1.{label} lost joint_sim_s")
+        assert st["stage1_sim_speedup"] > 0
+    # the acceptance-criterion win is visible in the artifact: at least
+    # one QoS scenario improves under share-aware stage 1
+    assert any(rows["stage1"]["stage1_sim_speedup"] > 1.0
+               for rows in data.values() if "stage1" in rows), (
+        "no scenario shows a share-aware stage-1 simulated-makespan win")

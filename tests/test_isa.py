@@ -4,7 +4,7 @@ dispatch semantics."""
 import pytest
 from _hyp_compat import given, settings, strategies as st
 
-from repro.core.isa import (Epilogue, Instruction, LMUBody, MIUBody,
+from repro.core.isa import (Epilogue, LMUBody, MIUBody,
                             MMUBody, OpType, Program, SFUBody, UnitKind,
                             disassemble, mk)
 

@@ -1,14 +1,13 @@
 """Stage-1 DSE: performance-model invariants + the paper's single-PE
 claims (Fig. 10)."""
 
-import pytest
 from _hyp_compat import given, settings, strategies as st
 
 from repro.core.graph import Layer, LayerKind, NonLinear
-from repro.core.perf_model import (DoraPlatform, Policy, TilePlan,
+from repro.core.perf_model import (DoraPlatform, Policy,
                                    build_candidate_table,
                                    enumerate_layer_candidates,
-                                   layer_latency, pe_mm_cycles,
+                                   pe_mm_cycles,
                                    plan_tpu_gemm_tiles,
                                    single_pe_efficiency)
 

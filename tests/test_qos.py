@@ -19,7 +19,7 @@ import pytest
 from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
                         MIUBody, MultiTenantWorkload, OpType, Policy,
                         Program, UnitKind, interleave_aware_bound,
-                        interleave_stream, mk, mlp_graph,
+                        mk, mlp_graph,
                         mode_latency_at_share, share_scaled_platform,
                         simulate)
 from repro.core.codegen import CodegenResult, InstrMeta, MemoryMap

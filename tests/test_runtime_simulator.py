@@ -3,11 +3,10 @@ runtime numerics vs the numpy oracle, (b) event-driven simulator timing
 vs the schedule, (c) ready-list RAW synchronization."""
 
 import numpy as np
-import pytest
 from _hyp_compat import given, settings, strategies as st
 
 from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
-                        NonLinear, OpType, Policy, Program, mlp_graph,
+                        NonLinear, OpType, Policy, mlp_graph,
                         random_dag, simulate)
 from repro.core.graph import WorkloadGraph
 

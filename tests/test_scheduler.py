@@ -3,7 +3,6 @@ DAGs vs exhaustive search, GA feasibility + quality, DAG partitioning."""
 
 import itertools
 
-import numpy as np
 import pytest
 from _hyp_compat import given, settings, strategies as st
 

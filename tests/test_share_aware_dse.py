@@ -1,0 +1,278 @@
+"""Share-aware stage-1 DSE + the oversubscription-aware schedule bound.
+
+Covers the PR's acceptance criteria:
+  - ``bandwidth_share=1.0`` (and an all-ones ``layer_shares`` map)
+    reproduce today's candidate table bit for bit — the full-bandwidth
+    stage 1 is regression-locked;
+  - a low-share tenant's chosen modes are no more MIU-bound than its
+    full-bandwidth modes (average DRAM demand can only drop);
+  - the oversubscription-aware bound is >= the interleave-aware bound
+    (which is >= the contiguous bound) and <= the arbitrated simulator
+    on the benchmark's small_pair scenario;
+  - the knobs plumb through CompileOptions / CompileResult /
+    MultiTenantWorkload, and share-aware stage 1 measurably improves
+    the simulated wfq makespan on the QoS trio scenario.
+"""
+
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
+                        MultiTenantWorkload, Policy, build_candidate_table,
+                        enumerate_layer_candidates, interleave_aware_bound,
+                        layer_dram_bytes, mlp_graph, mode_dram_demand,
+                        oversubscription_aware_bound, simulate)
+
+PLAT = DoraPlatform.vck190()
+POLICY = Policy.dora()
+
+
+def _graph():
+    return mlp_graph("m", 256, [512, 1024, 256])
+
+
+# ---------------------------------------------- share=1.0 regression lock
+
+def test_share_one_table_is_bit_for_bit_identical():
+    g = _graph()
+    base = build_candidate_table(g, PLAT, POLICY)
+    explicit = build_candidate_table(g, PLAT, POLICY, bandwidth_share=1.0)
+    mapped = build_candidate_table(g, PLAT, POLICY,
+                                   layer_shares={l.id: 1.0
+                                                 for l in g.layers})
+    assert base == explicit == mapped
+    for modes in base.values():
+        assert all(m.priced_share == 1.0 for m in modes)
+
+
+def test_share_validation():
+    g = _graph()
+    layer = g.layers[0]
+    for bad in (0.0, -0.2, 1.5):
+        with pytest.raises(ValueError, match="bandwidth_share"):
+            enumerate_layer_candidates(layer, PLAT, POLICY,
+                                       bandwidth_share=bad)
+
+
+def test_low_share_table_is_priced_and_tagged():
+    g = _graph()
+    low = build_candidate_table(g, PLAT, POLICY, bandwidth_share=0.25)
+    full = build_candidate_table(g, PLAT, POLICY)
+    for lid in full:
+        assert all(m.priced_share == 0.25 for m in low[lid])
+        # share-priced latencies are >= the full-bandwidth ones for the
+        # fastest row: shrinking DRAM bandwidth can only slow a mode
+        assert (min(m.latency_s for m in low[lid])
+                >= min(m.latency_s for m in full[lid]) - 1e-18)
+
+
+def test_layer_shares_override_per_layer():
+    g = _graph()
+    lid0 = g.layers[0].id
+    mixed = build_candidate_table(g, PLAT, POLICY,
+                                  layer_shares={lid0: 0.25})
+    assert all(m.priced_share == 0.25 for m in mixed[lid0])
+    other = [l.id for l in g.layers if l.id != lid0]
+    for lid in other:
+        assert all(m.priced_share == 1.0 for m in mixed[lid])
+
+
+# ------------------------------------------- low share => less MIU-hungry
+
+def test_low_share_selected_modes_no_more_miu_bound():
+    """The engine's mode selection (fastest row per layer) under a low
+    share must not demand more DRAM bandwidth than under full bandwidth:
+    pricing the DRAM term up shifts the argmin toward reuse-heavier,
+    less MIU-hungry tiles."""
+    g = _graph()
+    full = build_candidate_table(g, PLAT, POLICY)
+    low = build_candidate_table(g, PLAT, POLICY, bandwidth_share=0.2)
+    total_full, total_low = 0.0, 0.0
+    for layer in g.layers:
+        pick_full = min(full[layer.id], key=lambda c: c.latency_s)
+        pick_low = min(low[layer.id], key=lambda c: c.latency_s)
+        d_full = mode_dram_demand(layer, pick_full, PLAT, POLICY)
+        d_low = mode_dram_demand(layer, pick_low, PLAT, POLICY)
+        assert d_low <= d_full + 1e-12, (
+            f"layer {layer.id}: low-share mode demands more bandwidth "
+            f"({d_low:.3f} > {d_full:.3f})")
+        total_full += d_full
+        total_low += d_low
+    assert total_low < total_full  # strictly less hungry in aggregate
+
+
+def test_low_share_modes_move_less_dram_traffic():
+    g = _graph()
+    full = build_candidate_table(g, PLAT, POLICY)
+    low = build_candidate_table(g, PLAT, POLICY, bandwidth_share=0.2)
+    bytes_full = sum(
+        layer_dram_bytes(l, min(full[l.id], key=lambda c: c.latency_s).plan,
+                         PLAT, POLICY) for l in g.layers)
+    bytes_low = sum(
+        layer_dram_bytes(l, min(low[l.id], key=lambda c: c.latency_s).plan,
+                         PLAT, POLICY) for l in g.layers)
+    assert bytes_low <= bytes_full + 1e-9
+
+
+# ------------------------------------------- oversubscription-aware bound
+
+def _contended_pair(**kw) -> MultiTenantWorkload:
+    mt = MultiTenantWorkload("contend", interleave="rr", **kw)
+    mt.add_tenant("m0", mlp_graph("m0", 256, [256, 256, 256]))
+    mt.add_tenant("m1", mlp_graph("m1", 256, [256, 256, 256]))
+    return mt
+
+
+def _small_pair_compile():
+    from repro.configs import paper_models
+    mt = MultiTenantWorkload("small_pair")
+    mt.add_tenant("BERT-S", paper_models.get("BERT-S"))
+    mt.add_tenant("NCF-S", paper_models.get("NCF-S"))
+    comp = DoraCompiler(PLAT, POLICY)
+    return mt, comp.compile(mt, CompileOptions(engine="list"))
+
+
+def test_oversubscription_bound_ordering_small_pair():
+    """contiguous <= interleave-aware <= oversubscription <= simulator,
+    on the benchmark's small diverse pair (where the joint schedule has
+    genuine same-tenant concurrency to re-price)."""
+    mt, res = _small_pair_compile()
+    shares = mt.resolve_bandwidth_shares()
+    arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
+    ilv = interleave_aware_bound(res.schedule, res.graph, PLAT, POLICY,
+                                 res.tenant_of, shares,
+                                 release=res.release)
+    over = oversubscription_aware_bound(res.schedule, res.graph, PLAT,
+                                        POLICY, res.tenant_of, shares,
+                                        release=res.release)
+    assert over.contiguous_makespan_s == pytest.approx(res.makespan_s)
+    assert over.interleave_aware_makespan_s == pytest.approx(
+        ilv.makespan_s)
+    assert res.makespan_s <= ilv.makespan_s + 1e-15
+    assert ilv.makespan_s <= over.makespan_s + 1e-15
+    # strictly tighter here: small_pair has same-tenant concurrency
+    assert over.makespan_s > ilv.makespan_s
+    for v in (1, 2):
+        sim = simulate(res.codegen, PLAT.with_vc(v, "rr"),
+                       arrivals=arrivals).makespan_s
+        assert over.makespan_s <= sim + 1e-12
+        assert abs(sim - over.makespan_s) <= abs(sim - ilv.makespan_s)
+
+
+def test_oversubscription_bound_single_tenant_is_identity():
+    g = mlp_graph("solo", 256, [256, 256])
+    res = DoraCompiler(PLAT, POLICY).compile(
+        g, CompileOptions(engine="list"))
+    over = oversubscription_aware_bound(res.schedule, res.graph, PLAT,
+                                        POLICY, {}, {})
+    assert over.makespan_s == pytest.approx(res.makespan_s)
+    assert over.interleave_aware_makespan_s == pytest.approx(res.makespan_s)
+
+
+def test_oversubscription_bound_respects_release_times():
+    mt = _contended_pair(bandwidth_shares={"m0": 0.7, "m1": 0.3})
+    mt.tenants[1] = replace(mt.tenants[1], arrival_s=1.0e-3)
+    res = DoraCompiler(PLAT, POLICY).compile(
+        mt, CompileOptions(engine="list", qos="wfq"))
+    assert res.oversubscription_bound is not None
+    for lid, end in res.oversubscription_bound.layer_end_s.items():
+        if res.tenant_of[lid] == 1:
+            assert end >= 1.0e-3
+
+
+# -------------------------------------------------------------- plumbing
+
+def test_compile_options_plumb_share_aware_stage1():
+    comp = DoraCompiler(PLAT, POLICY)
+    mt = _contended_pair(bandwidth_shares={"m0": 0.75, "m1": 0.25})
+    on = comp.compile(mt, CompileOptions(engine="list"))
+    # explicit shares => share-aware stage 1 by default
+    assert on.share_aware_stage1
+    assert on.oversubscription_bound is not None
+    shares_of = {e.mode.priced_share for e in on.schedule.entries}
+    assert shares_of == {0.75, 0.25}
+    forced_off = comp.compile(
+        mt, CompileOptions(engine="list", share_aware_stage1=False))
+    assert not forced_off.share_aware_stage1
+    assert all(e.mode.priced_share == 1.0
+               for e in forced_off.schedule.entries)
+    # workload-level default, overridden per compile
+    mt.share_aware_stage1 = False
+    wl_off = comp.compile(mt, CompileOptions(engine="list"))
+    assert not wl_off.share_aware_stage1
+    wl_forced = comp.compile(
+        mt, CompileOptions(engine="list", share_aware_stage1=True))
+    assert wl_forced.share_aware_stage1
+
+
+def test_share_aware_stage1_requires_qos():
+    comp = DoraCompiler(PLAT, POLICY)
+    with pytest.raises(ValueError, match="share_aware_stage1"):
+        comp.compile(mlp_graph("solo", 64, [64]),
+                     CompileOptions(engine="list",
+                                    share_aware_stage1=True))
+    with pytest.raises(ValueError, match="share_aware_stage1"):
+        comp.compile(_contended_pair(),
+                     CompileOptions(engine="list", qos="none",
+                                    share_aware_stage1=True))
+
+
+def test_priority_proportional_wfq_keeps_full_bandwidth_stage1():
+    """qos='wfq' without explicit shares must not silently re-price the
+    table (the pre-PR contract): share-aware stage 1 stays opt-in."""
+    comp = DoraCompiler(PLAT, POLICY)
+    res = comp.compile(_contended_pair(),
+                       CompileOptions(engine="list", qos="wfq"))
+    assert not res.share_aware_stage1
+    assert all(e.mode.priced_share == 1.0 for e in res.schedule.entries)
+    assert res.oversubscription_bound is not None
+
+
+def test_share_aware_compile_matches_manual_table():
+    """The compiler's layer_shares plumbing prices each joint layer at
+    exactly its tenant's resolved share."""
+    comp = DoraCompiler(PLAT, POLICY)
+    mt = _contended_pair(bandwidth_shares={"m0": 0.6, "m1": 0.4})
+    res = comp.compile(mt, CompileOptions(engine="list"))
+    merged = mt.merge()
+    manual = build_candidate_table(
+        merged.graph, PLAT, POLICY,
+        layer_shares={lid: res.bandwidth_shares[ti]
+                      for lid, ti in merged.tenant_of.items()})
+    assert res.candidates == manual
+
+
+# ------------------------------------- the QoS win the tentpole claims
+
+def test_share_aware_stage1_improves_qos_trio_sim_makespan():
+    """On the benchmark's QoS scenario (BERT-S + NCF-S + MLP-S with
+    explicit 0.5/0.3/0.2 guarantees) share-aware stage 1 improves the
+    simulated wfq makespan: low-share tenants pick smaller, less
+    MIU-hungry tiles, shrinking total DRAM traffic (also asserted in
+    BENCH_multi_tenant.json's stage1 rows)."""
+    from repro.configs import paper_models
+    shares = {"BERT-S": 0.5, "NCF-S": 0.3, "MLP-S": 0.2}
+    sims = {}
+    bytes_total = {}
+    for sa in (False, True):
+        mt = MultiTenantWorkload("small_trio", interleave="priority",
+                                 bandwidth_shares=dict(shares))
+        for name in shares:
+            mt.add_tenant(name, paper_models.get(name))
+        comp = DoraCompiler(PLAT, POLICY)
+        res = comp.compile(mt, CompileOptions(engine="list", qos="wfq",
+                                              share_aware_stage1=sa))
+        arrivals = {ti: t.arrival_s for ti, t in enumerate(mt.tenants)}
+        rep = simulate(res.codegen, PLAT.with_vc(2, "wfq"),
+                       arrivals=arrivals,
+                       bandwidth_shares=res.bandwidth_shares)
+        sims[sa] = rep.makespan_s
+        bytes_total[sa] = sum(
+            layer_dram_bytes(res.graph.layers[e.layer_id], e.mode.plan,
+                             PLAT, POLICY)
+            for e in res.schedule.entries)
+    assert sims[True] < sims[False], (
+        f"share-aware stage 1 did not improve the QoS trio: "
+        f"{sims[True]:.6g} vs {sims[False]:.6g}")
+    assert bytes_total[True] < bytes_total[False]

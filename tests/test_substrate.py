@@ -3,7 +3,6 @@ checkpointing (+fault tolerance), sharding rules, HLO analysis."""
 
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
