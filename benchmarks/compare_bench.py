@@ -1,0 +1,117 @@
+"""CI perf-regression gate for the multi-tenant bench artifact.
+
+Diffs a freshly generated ``bench_multi_tenant.py --json`` artifact
+against the committed ``BENCH_multi_tenant.json`` seed and fails (exit
+code 1) when any *simulated makespan* regressed by more than the
+threshold (default 10 %).  Only measured timings gate the build:
+
+  - keys ending in ``_sim_s`` / ``sim_s`` (joint, base, sequential and
+    per-model solo simulations),
+  - per-tenant ``makespan_s`` rows;
+
+analytic bounds (``sched_s``, ``aware_sched_s``, ...), gap fractions,
+ratios, and satisfaction rows shift by design when pricing models
+change, so they are reported but never gated.  Only paths present in
+*both* artifacts are compared — a partial regeneration (CI's
+``--scenario small_pair`` smoke) gates just the scenarios it re-ran,
+and newly added rows never fail against an older baseline.
+
+Usage: PYTHONPATH=src python benchmarks/compare_bench.py fresh.json \
+           [--baseline BENCH_multi_tenant.json] [--threshold 0.10]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# a simulated makespan leaf: the keys the gate applies to
+_GATED_SUFFIXES = ("_sim_s", "makespan_s")
+_GATED_EXACT = ("sim_s",)
+# parents whose (name -> float) children are per-tenant simulations
+_GATED_PARENTS = ("solo_sim",)
+
+
+def _is_gated(path: tuple[str, ...]) -> bool:
+    key = path[-1]
+    if len(path) >= 2 and path[-2] in _GATED_PARENTS:
+        return True
+    return key in _GATED_EXACT or any(key.endswith(s)
+                                      for s in _GATED_SUFFIXES)
+
+
+def flatten(node, prefix: tuple[str, ...] = ()) -> dict[tuple[str, ...], float]:
+    """All numeric leaves of a nested JSON object, keyed by path."""
+    out: dict[tuple[str, ...], float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten(v, prefix + (str(k),)))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+    return out
+
+
+def compare(fresh: dict, baseline: dict, threshold: float
+            ) -> tuple[list[str], list[str]]:
+    """(regressions, improvements) among the gated makespan leaves
+    present in both artifacts."""
+    f, b = flatten(fresh), flatten(baseline)
+    regressions: list[str] = []
+    improvements: list[str] = []
+    for path in sorted(set(f) & set(b)):
+        if not _is_gated(path):
+            continue
+        base, new = b[path], f[path]
+        if base <= 0.0:
+            continue
+        rel = new / base - 1.0
+        label = ".".join(path)
+        if rel > threshold:
+            regressions.append(
+                f"{label}: {base:.6g} -> {new:.6g} (+{rel * 100:.1f}%)")
+        elif rel < -threshold:
+            improvements.append(
+                f"{label}: {base:.6g} -> {new:.6g} ({rel * 100:.1f}%)")
+    return regressions, improvements
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly generated --json artifact")
+    ap.add_argument("--baseline", default="BENCH_multi_tenant.json",
+                    help="committed artifact to gate against "
+                         "(default: %(default)s)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max tolerated relative makespan regression "
+                         "(default: %(default)s)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    regressions, improvements = compare(fresh, baseline, args.threshold)
+    n_gated = sum(1 for p in set(flatten(fresh)) & set(flatten(baseline))
+                  if _is_gated(p))
+    print(f"compared {n_gated} simulated-makespan rows "
+          f"(threshold {args.threshold * 100:.0f}%)")
+    for line in improvements:
+        print(f"  improved   {line}")
+    if regressions:
+        print(f"FAIL: {len(regressions)} makespan regression(s) "
+              f"beyond {args.threshold * 100:.0f}%:", file=sys.stderr)
+        for line in regressions:
+            print(f"  regressed  {line}", file=sys.stderr)
+        return 1
+    if n_gated == 0:
+        print("FAIL: no overlapping makespan rows — wrong artifact?",
+              file=sys.stderr)
+        return 1
+    print("OK: no makespan regression")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,11 +14,12 @@ from .milp import MilpScheduler, SolveResult
 from .multi_tenant import (QOS_POLICIES, MergedWorkload, MultiTenantWorkload,
                            TenantSpec)
 from .partition import PartitionedResult, partitioned_solve, split_segments
-from .perf_model import (VC_ARBITRATIONS, CandidateMode, DoraPlatform, Policy,
-                         TilePlan, TpuGemmTiles, build_candidate_table,
-                         enumerate_layer_candidates, layer_dram_bytes,
-                         layer_latency, mode_dram_demand,
-                         mode_latency_at_share, plan_tpu_gemm_tiles,
+from .perf_model import (LATENCY_MODELS, VC_ARBITRATIONS, CandidateMode,
+                         DoraPlatform, Policy, TilePlan, TpuGemmTiles,
+                         build_candidate_table, enumerate_layer_candidates,
+                         layer_dram_bytes, layer_latency, mode_dram_demand,
+                         mode_latency_at_share, pipeline_layer_latency,
+                         plan_buffer_depth, plan_tpu_gemm_tiles,
                          share_scaled_platform, single_pe_efficiency)
 from .runtime import DoraRuntime
 from .schedule import (InterleaveBound, OversubscriptionBound, Schedule,

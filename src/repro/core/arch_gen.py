@@ -46,7 +46,8 @@ def generate_platform(template: ArchTemplate,
 def evaluate_template(template: ArchTemplate,
                       graphs: Sequence[WorkloadGraph],
                       policy: Policy | None = None,
-                      bandwidth_share: float = 1.0) -> float:
+                      bandwidth_share: float = 1.0,
+                      latency_model: str = "analytic") -> float:
     """Mean makespan over a model set under a fast list schedule — the
     fitness used by the architecture search.
 
@@ -54,13 +55,20 @@ def evaluate_template(template: ArchTemplate,
     the DRAM bandwidth (share-aware stage 1): searching a template for a
     multi-tenant deployment should size it for the bandwidth each
     resident workload is actually guaranteed, not the full-bandwidth
-    solo assumption."""
+    solo assumption.
+
+    ``latency_model`` ("analytic" | "pipeline") selects the stage-1
+    pricing model: pipeline pricing scores templates by the fill/drain
+    and MIU-serialization costs the emitted stream actually pays, so
+    a search stops over-crediting configurations that only look good
+    under the perfect-overlap assumption."""
     policy = policy or Policy.dora()
     platform = generate_platform(template)
     total = 0.0
     for g in graphs:
         cands = build_candidate_table(g, platform, policy,
-                                      bandwidth_share=bandwidth_share)
+                                      bandwidth_share=bandwidth_share,
+                                      latency_model=latency_model)
         total += list_schedule(g, cands, platform).makespan
     return total / max(len(graphs), 1)
 
@@ -71,6 +79,7 @@ def search_template(graphs: Sequence[WorkloadGraph],
                     sfu_options: Sequence[int] = (1, 3),
                     area_budget: float | None = 600.0,
                     bandwidth_share: float = 1.0,
+                    latency_model: str = "analytic",
                     ) -> tuple[ArchTemplate, float]:
     best: tuple[ArchTemplate, float] | None = None
     for nm in mmu_options:
@@ -80,7 +89,8 @@ def search_template(graphs: Sequence[WorkloadGraph],
                 if area_budget is not None and t.resource_cost() > area_budget:
                     continue
                 score = evaluate_template(t, graphs,
-                                          bandwidth_share=bandwidth_share)
+                                          bandwidth_share=bandwidth_share,
+                                          latency_model=latency_model)
                 if best is None or score < best[1]:
                     best = (t, score)
     assert best is not None

@@ -22,7 +22,7 @@ from .interleave import POLICIES as INTERLEAVE_POLICIES
 from .milp import MilpScheduler, SolveResult
 from .multi_tenant import QOS_POLICIES, MultiTenantWorkload
 from .partition import partitioned_solve
-from .perf_model import (CandidateMode, DoraPlatform, Policy,
+from .perf_model import (LATENCY_MODELS, CandidateMode, DoraPlatform, Policy,
                          build_candidate_table)
 from .runtime import DoraRuntime, MatmulFn
 from .schedule import (InterleaveBound, OversubscriptionBound, Schedule,
@@ -60,6 +60,17 @@ class CompileOptions:
     # ``share_aware_stage1`` (default: on iff the workload carries
     # explicit bandwidth_shares).
     share_aware_stage1: bool | None = None
+    # stage-1 latency pricing model (perf_model.LATENCY_MODELS):
+    # "analytic" is layer_latency's perfect-overlap steady state (the
+    # classic table); "pipeline" is pipeline_layer_latency's explicit
+    # tile pipeline (fill/drain per output group, in-order MIU issue
+    # serialization, finite double-buffer depth) — provably >= analytic
+    # per row, and much closer to the event-driven simulator on
+    # DRAM-bound layers.  None defers to "analytic" (bit-for-bit lock
+    # on the default).  Composes with share-aware stage 1: pipeline
+    # rows priced at a share see the share-scaled DRAM term in every
+    # pipeline stage.
+    latency_model: str | None = None
 
 
 @dataclass
@@ -86,6 +97,9 @@ class CompileResult:
     # True when stage 1 priced each tenant's candidate table at its
     # resolved bandwidth share (CompileOptions.share_aware_stage1):
     share_aware_stage1: bool = False
+    # the resolved stage-1 pricing model (CompileOptions.latency_model;
+    # None resolves to "analytic"):
+    latency_model: str = "analytic"
 
     @property
     def makespan_s(self) -> float:
@@ -192,13 +206,18 @@ class DoraCompiler:
             raise ValueError(
                 "share_aware_stage1 requires resolved bandwidth shares "
                 "(a MultiTenantWorkload compiled with qos='wfq')")
+        latency_model = options.latency_model or "analytic"
+        if latency_model not in LATENCY_MODELS:
+            raise ValueError(f"unknown latency_model {latency_model!r}; "
+                             f"expected one of {LATENCY_MODELS}")
 
         t0 = time.perf_counter()
         layer_shares = ({lid: shares[ti] for lid, ti in tenant_of.items()}
                         if share_aware else None)
         candidates = build_candidate_table(graph, self.platform, self.policy,
                                            max_mmu=mmu_cap,
-                                           layer_shares=layer_shares)
+                                           layer_shares=layer_shares,
+                                           latency_model=latency_model)
         t1 = time.perf_counter()
 
         trace: list[tuple[float, float]] = []
@@ -267,7 +286,8 @@ class DoraCompiler:
                              schedule, cg, t1 - t0, t2 - t1, t3 - t2,
                              trace, optimal, mt_workload, tenant_of, release,
                              shares, qos_bound, oversub_bound,
-                             share_aware_stage1=bool(share_aware))
+                             share_aware_stage1=bool(share_aware),
+                             latency_model=latency_model)
 
     # -------------------------------------------------------------- backends
     def execute(self, result: CompileResult,

@@ -23,7 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from functools import lru_cache
 
-from .graph import Layer, LayerKind, WorkloadGraph
+from .graph import Layer, LayerKind, NonLinear, WorkloadGraph
 
 
 def ceil_div(a: int, b: int) -> int:
@@ -40,6 +40,14 @@ def round_up(a: int, b: int) -> int:
 
 # MIU virtual-channel arbitration policies (see simulator._simulate_vc)
 VC_ARBITRATIONS = ("fifo", "rr", "priority", "wfq")
+
+# Stage-1 latency pricing models (CompileOptions.latency_model):
+#   analytic — layer_latency's steady-state max(compute, stream, dram)
+#              with perfect ping/pong overlap (the classic table);
+#   pipeline — pipeline_layer_latency's explicit k-stage tile pipeline
+#              (fill/drain per output group, in-order MIU issue
+#              serialization, finite double-buffer depth).
+LATENCY_MODELS = ("analytic", "pipeline")
 
 
 @dataclass(frozen=True)
@@ -220,7 +228,10 @@ class CandidateMode:
     ``priced_share`` records the effective DRAM-bandwidth fraction the
     mode's ``latency_s`` was priced at (share-aware stage 1 prices a
     tenant's rows at its guaranteed share; 1.0 = the classic
-    full-bandwidth table)."""
+    full-bandwidth table).  ``latency_model`` records which pricing
+    model produced ``latency_s`` (one of ``LATENCY_MODELS``) so later
+    re-pricings — ``mode_latency_at_share``, the schedule bounds —
+    stay consistent with the model the row was built under."""
 
     layer_id: int
     mode_id: int
@@ -230,6 +241,7 @@ class CandidateMode:
     latency_s: float
     plan: TilePlan | None = None
     priced_share: float = 1.0
+    latency_model: str = "analytic"
 
     def dominates(self, other: "CandidateMode") -> bool:
         return (self.n_lmu <= other.n_lmu and self.n_mmu <= other.n_mmu
@@ -358,6 +370,189 @@ def layer_latency(layer: Layer, plan: TilePlan, platform: DoraPlatform,
 
 
 # ---------------------------------------------------------------------------
+# Pipeline-aware layer latency (stage-1 "pipeline" pricing model)
+# ---------------------------------------------------------------------------
+
+def _tile_sizes(total: int, tile: int) -> list[tuple[int, int]]:
+    """(size, count) classes of the 1-D tiling of ``total`` by ``tile``:
+    at most one remainder class, so a full 3-D grid has <= 8 distinct
+    iteration classes regardless of how many iterations it runs."""
+    if total <= tile:
+        return [(total, 1)]
+    full, rem = divmod(total, tile)
+    out = [(tile, full)]
+    if rem:
+        out.append((rem, 1))
+    return out
+
+
+@lru_cache(maxsize=65536)
+def _launch_cycles_cached(tm: int, tk: int, tn: int,
+                          platform: DoraPlatform, policy: Policy) -> int:
+    """Memoized ``mmu_launch_cycles``: the pipeline walk prices every
+    iteration class of every enumerated tile combo, and the clamped
+    launch bounds repeat heavily across reuse factors."""
+    return mmu_launch_cycles(tm, tk, tn, platform, policy)
+
+
+def plan_buffer_depth(plan: TilePlan, platform: DoraPlatform) -> int:
+    """Operand-buffer depth the plan's LMU allocation actually sustains:
+    how many in-flight tile copies (ping/pong = 2) fit in the LMUs
+    reserved for the smaller of LHS/RHS.  The emitted stream's
+    back-pressure (codegen: loads of iteration i wait on the GEMM of
+    iteration i-2) caps the usable depth at 2, so this returns 1 (fully
+    serial — a degenerate plan whose budget holds a single copy) or 2
+    (the double-buffered steady state)."""
+    dsz = platform.dtype_bytes
+    lhs_copy = plan.lmu_m * plan.lmu_k * dsz
+    rhs_copy = plan.lmu_k * plan.lmu_n * dsz
+    depth = min(plan.lhs_lmus * platform.lmu_bytes // max(lhs_copy, 1),
+                plan.rhs_lmus * platform.lmu_bytes // max(rhs_copy, 1))
+    return max(1, min(2, int(depth)))
+
+
+def pipeline_layer_latency(layer: Layer, plan: TilePlan | None,
+                           platform: DoraPlatform, policy: Policy,
+                           n_sfu: int, max_k_dp: int = 512,
+                           analytic_floor: float | None = None) -> float:
+    """Latency of one layer under one tile plan, pricing the tile loop
+    as the explicit pipeline the code generator actually emits (seconds).
+
+    ``layer_latency`` assumes perfect ping/pong overlap: every on-chip
+    iteration costs ``max(compute, stream, dram)``, as if loads,
+    LMU->MMU streaming, and GEMMs of different iterations overlapped
+    freely.  The emitted stream cannot do that: the single in-order MIU
+    serializes every LOAD/STORE, each iteration's GEMM sits behind its
+    own loads and moves, the double-buffer back-pressure lets loads run
+    at most ``plan_buffer_depth`` (= 2) iterations ahead, and each
+    output group's STORE is an MIU barrier — the next group's loads
+    queue behind it, so the pipeline refills per (mi, ni) group.  This
+    model replays exactly that structure:
+
+      - per (mi, ni) output group: prologue fill (first loads + first
+        stream-in), then per k-iteration
+        ``load -> move -> gemm`` with the in-order recurrences
+        (load_i >= gemm_{i-depth}, one MIU, one LMU lead, one MMU
+        chain), then the group's fused-SFU pass (row-reduction NLs)
+        and the STORE drain;
+      - remainder tiles are priced at their true sizes (the grid has
+        <= 8 distinct iteration classes, so the walk is closed-form in
+        the grid size; a per-class steady-state formula replaces the
+        k-loop recurrence when ``k_iters > max_k_dp``);
+      - groups serialize at their stores (the in-order MIU), so the
+        layer total is the class-weighted sum of group times.
+
+    Calibrated so it is provably >= the analytic bound: the result is
+    ``max(pipeline replay, layer_latency(...))`` — never faster than
+    the model every existing table, engine, and schedule bound already
+    trusts — and it shrinks monotonically as ``dram_bw_bytes`` grows,
+    so share-scaled re-pricing (``mode_latency_at_share``) keeps the
+    contiguous <= interleave-aware <= oversubscription bound ordering.
+    NL layers have no tile pipeline (one streamed pass) and price
+    identically under both models.
+
+    ``analytic_floor``: the caller's already-computed
+    ``layer_latency(layer, plan, platform, policy, n_sfu)`` for the
+    identical arguments, to skip recomputing it (the enumeration's
+    pruning path prices it anyway).
+    """
+    analytic = (analytic_floor if analytic_floor is not None else
+                layer_latency(layer, plan, platform, policy, n_sfu))
+    if layer.kind is LayerKind.NL or plan is None:
+        return analytic
+
+    M, K, N = layer.M, layer.K, layer.N
+    if not policy.flexible_memory:
+        g = policy.buffer_granularity
+        M, K, N = round_up(M, g), round_up(K, g), round_up(N, g)
+    lm = min(plan.lmu_m, round_up(M, plan.launch_m))
+    lk = min(plan.lmu_k, round_up(K, plan.launch_k))
+    ln = min(plan.lmu_n, round_up(N, plan.launch_n))
+
+    dsz = platform.dtype_bytes
+    bw = platform.dram_bw_bytes
+    sbw = platform.stream_bw_bytes * platform.mmu_ports
+    sync = platform.sync_overhead_s
+    depth = plan_buffer_depth(plan, platform)
+    m_classes = _tile_sizes(M, lm)
+    n_classes = _tile_sizes(N, ln)
+    k_classes = _tile_sizes(K, lk)
+    k_iters = sum(cnt for _, cnt in k_classes)
+    # fused row-reduction NLs run on the SFU inside each group, between
+    # the last GEMM and the STORE (codegen's fused_nl path needs the
+    # whole row on chip: ln >= N); element-wise NLs fold into the MMU
+    # epilogue and the un-fused fallback re-streams after the loop.
+    fused_sfu = (layer.nonlinear is not None
+                 and layer.nonlinear in (NonLinear.SOFTMAX,
+                                         NonLinear.LAYERNORM)
+                 and ln >= N and n_sfu >= 1)
+
+    def _iter_times(mr: int, nr: int, ks: int) -> tuple[float, float, float]:
+        """(load, move, gemm) stage times of one (mr, ks, nr) k-iteration
+        — the same byte/cycle weights codegen attaches to the emitted
+        instructions."""
+        op_bytes = (mr * ks + ks * nr) * dsz
+        launches = (ceil_div(mr, plan.launch_m) * ceil_div(ks, plan.launch_k)
+                    * ceil_div(nr, plan.launch_n))
+        cyc = _launch_cycles_cached(min(plan.launch_m, mr), plan.launch_k,
+                                    min(plan.launch_n, nr), platform, policy)
+        return (op_bytes / bw, op_bytes / sbw,
+                max(launches, 1) * cyc / platform.freq_mmu_hz + sync)
+
+    def _group_time(mr: int, nr: int) -> float:
+        """One (mi, ni) output group: fill + k-loop pipeline + SFU +
+        STORE drain, starting from an idle machine (the previous
+        group's STORE drained every unit)."""
+        if k_iters <= max_k_dp:
+            # explicit per-iteration recurrence; the back-pressure
+            # window only ever reaches `depth` (<= 2) iterations back,
+            # so two rolling GEMM ends carry the whole DP state
+            lend = mend = g1 = g2 = 0.0
+            for ks, cnt in k_classes:
+                l_t, m_t, g_t = _iter_times(mr, nr, ks)
+                for _ in range(cnt):
+                    bp = g2 if depth == 2 else g1
+                    lend = max(lend, bp) + l_t
+                    mend = max(mend, lend) + m_t
+                    g2 = g1 if depth == 2 else 0.0
+                    g1 = max(g1, mend) + g_t
+            last = g1
+        else:
+            # closed-form steady state for huge k grids: prologue fill,
+            # then every iteration advances the pipe by its bottleneck
+            # period — the slowest stage, or the whole serial chain
+            # split across the buffer depth when no stage dominates.
+            l0, m0, _ = _iter_times(mr, nr, k_classes[0][0])
+            last = l0 + m0
+            for ks, cnt in k_classes:
+                l_t, m_t, g_t = _iter_times(mr, nr, ks)
+                last += cnt * max(l_t, m_t, g_t, (l_t + m_t + g_t) / depth)
+        if fused_sfu:
+            last += mr * nr / (platform.sfu_elems_per_cycle
+                               * platform.freq_pl_hz)
+        return last + mr * nr * dsz / bw          # the STORE drain
+
+    total = platform.startup_s
+    for mr, cm in m_classes:
+        for nr, cn in n_classes:
+            total += cm * cn * _group_time(mr, nr)
+
+    # non-fused NL epilogues, matching what codegen emits: element-wise
+    # NLs with the full row on chip fold into the MMU epilogue (already
+    # inside the GEMM cycles above); everything else re-streams the
+    # stored output through the SFU as a separate DRAM pass.
+    if layer.nonlinear is not None and not fused_sfu:
+        row_on_chip = ln >= N and n_sfu >= 1
+        elementwise = layer.nonlinear not in (NonLinear.SOFTMAX,
+                                              NonLinear.LAYERNORM)
+        if not (row_on_chip and elementwise):
+            nl_t = layer.M * layer.N / (platform.sfu_elems_per_cycle
+                                        * platform.freq_pl_hz)
+            total += nl_t + 2 * layer.M * layer.N * dsz / bw
+    return max(total, analytic)
+
+
+# ---------------------------------------------------------------------------
 # Interleave-aware transfer-time model (QoS)
 # ---------------------------------------------------------------------------
 
@@ -382,12 +577,18 @@ def mode_latency_at_share(layer: Layer, mode: "CandidateMode",
     tenant's guaranteed share while other tenants' interleaved traffic
     contends for the MIU).  ``share=1`` reproduces ``mode.latency_s``;
     shrinking the share can only inflate the DRAM-bound component, so
-    the result is monotonically >= the contiguous-assumption latency."""
+    the result is monotonically >= the contiguous-assumption latency.
+    The re-pricing honours the model the row was built under
+    (``mode.latency_model``): a pipeline-priced row is re-priced with
+    ``pipeline_layer_latency``, keeping the schedule bounds' ordering
+    intact under either stage-1 pricing."""
     if share >= 1.0:
         return mode.latency_s
     scaled = share_scaled_platform(platform, share)
-    return layer_latency(layer, mode.plan, scaled, policy,
-                         n_sfu=mode.n_sfu)
+    price = (pipeline_layer_latency if mode.latency_model == "pipeline"
+             else layer_latency)
+    return price(layer, mode.plan, scaled, policy,
+                 n_sfu=mode.n_sfu)
 
 
 def layer_dram_bytes(layer: Layer, plan: TilePlan | None,
@@ -427,11 +628,16 @@ def mode_dram_demand(layer: Layer, mode: "CandidateMode",
     Always re-derived on the *physical* platform — ``mode.latency_s``
     may be share-priced (share-aware stage 1), and a share-priced
     denominator would understate the demand by up to the priced-share
-    factor.  NL candidates carry no plan; ``layer_latency``'s NL branch
-    ignores the plan, so a placeholder is enough to re-price them."""
+    factor.  The denominator follows the row's ``latency_model``
+    (pipeline-priced rows spread the same bytes over the longer
+    pipeline latency, so their average demand is lower).  NL candidates
+    carry no plan; ``layer_latency``'s NL branch ignores the plan, so a
+    placeholder is enough to re-price them."""
+    price = (pipeline_layer_latency if mode.latency_model == "pipeline"
+             else layer_latency)
     if mode.plan is not None:
-        lat = layer_latency(layer, mode.plan, platform, policy,
-                            n_sfu=mode.n_sfu)
+        lat = price(layer, mode.plan, platform, policy,
+                    n_sfu=mode.n_sfu)
     elif layer.kind is LayerKind.NL:
         lat = layer_latency(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
                                             layer.N, 1, 0, 1),
@@ -483,7 +689,8 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                                policy: Policy,
                                max_modes: int = 12,
                                max_mmu: int | None = None,
-                               bandwidth_share: float = 1.0
+                               bandwidth_share: float = 1.0,
+                               latency_model: str = "analytic"
                                ) -> list[CandidateMode]:
     """Build the candidate table rows for one layer: Pareto-optimal
     (resources -> latency) execution modes (paper Fig. 8b).
@@ -501,19 +708,34 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
     tenant's table shifts toward smaller, less MIU-hungry tiles.
     Capacity checks (LMU/PE memory fits) are share-independent and stay
     on the physical platform.  ``bandwidth_share=1.0`` reproduces the
-    classic table bit for bit."""
+    classic table bit for bit.
+
+    ``latency_model`` selects the pricing model for every row
+    (``LATENCY_MODELS``): ``"analytic"`` is ``layer_latency``'s
+    perfect-overlap steady state (the classic table, bit for bit);
+    ``"pipeline"`` is ``pipeline_layer_latency``'s explicit tile
+    pipeline (fill/drain, in-order MIU serialization, finite
+    double-buffer depth) — monotonically >= analytic per row.  It
+    composes with ``bandwidth_share``: pipeline rows priced at a share
+    see the share-scaled DRAM term in every pipeline stage."""
     if not 0.0 < bandwidth_share <= 1.0:
         raise ValueError(
             f"bandwidth_share must be in (0, 1], got {bandwidth_share}")
+    if latency_model not in LATENCY_MODELS:
+        raise ValueError(f"unknown latency_model {latency_model!r}; "
+                         f"expected one of {LATENCY_MODELS}")
+    price = (pipeline_layer_latency if latency_model == "pipeline"
+             else layer_latency)
     pricing = platform if bandwidth_share >= 1.0 else \
         share_scaled_platform(platform, bandwidth_share)
     if layer.kind is LayerKind.NL:
         lmus, _ = _operand_lmus(layer.M, layer.N, platform, policy)
-        lat = layer_latency(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
-                                            layer.N, 1, 0, 1), pricing,
-                            policy, n_sfu=1)
+        lat = price(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
+                                    layer.N, 1, 0, 1), pricing,
+                    policy, n_sfu=1)
         return [CandidateMode(layer.id, 0, min(lmus, platform.n_lmu), 0, 1,
-                              lat, None, priced_share=bandwidth_share)]
+                              lat, None, priced_share=bandwidth_share,
+                              latency_model=latency_model)]
 
     M, K, N = layer.M, layer.K, layer.N
     needs_sfu = layer.nonlinear is not None
@@ -545,12 +767,29 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                             continue
                         plan = TilePlan(am, ak, an, gm, gn, lm, lk, ln,
                                         l_lhs, l_rhs, l_out, l_nl)
-                        lat = layer_latency(layer, plan, pricing, policy,
-                                            n_sfu=1 if needs_sfu else 0)
+                        if latency_model == "pipeline":
+                            # exact pruning: pipeline >= analytic, so a
+                            # combo whose (cheap) analytic latency is
+                            # already strictly worse than the grid's
+                            # best pipeline row can never win the argmin
+                            a_lat = layer_latency(
+                                layer, plan, pricing, policy,
+                                n_sfu=1 if needs_sfu else 0)
+                            if (best_for_grid is not None
+                                    and a_lat > best_for_grid.latency_s):
+                                continue
+                            lat = pipeline_layer_latency(
+                                layer, plan, pricing, policy,
+                                n_sfu=1 if needs_sfu else 0,
+                                analytic_floor=a_lat)
+                        else:
+                            lat = price(layer, plan, pricing, policy,
+                                        n_sfu=1 if needs_sfu else 0)
                         cand = CandidateMode(layer.id, -1, n_lmu_used,
                                              n_mmu_used,
                                              1 if needs_sfu else 0, lat, plan,
-                                             priced_share=bandwidth_share)
+                                             priced_share=bandwidth_share,
+                                             latency_model=latency_model)
                         if (best_for_grid is None
                                 or cand.latency_s < best_for_grid.latency_s
                                 or (cand.latency_s == best_for_grid.latency_s
@@ -571,7 +810,8 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
 def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
                           policy: Policy, max_mmu: int | None = None,
                           bandwidth_share: float = 1.0,
-                          layer_shares: dict[int, float] | None = None
+                          layer_shares: dict[int, float] | None = None,
+                          latency_model: str = "analytic"
                           ) -> dict[int, list[CandidateMode]]:
     """Stage-1 output: layer id -> candidate modes (paper Fig. 6/8).
 
@@ -582,8 +822,11 @@ def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
     rows at that fraction of the DRAM bandwidth; ``layer_shares``
     overrides it per layer (the compiler passes each joint layer its
     tenant's resolved guarantee, so every tenant's table is priced at
-    the bandwidth it will actually receive under wfq arbitration).  The
-    defaults reproduce the classic full-bandwidth table bit for bit."""
+    the bandwidth it will actually receive under wfq arbitration).
+
+    ``latency_model`` ("analytic" | "pipeline") selects the per-row
+    pricing model, see ``enumerate_layer_candidates``.  The defaults
+    reproduce the classic full-bandwidth analytic table bit for bit."""
     table: dict[int, list[CandidateMode]] = {}
     cache: dict[tuple, list[CandidateMode]] = {}
     layer_shares = layer_shares or {}
@@ -597,7 +840,8 @@ def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
             continue
         cands = enumerate_layer_candidates(layer, platform, policy,
                                            max_mmu=max_mmu,
-                                           bandwidth_share=share)
+                                           bandwidth_share=share,
+                                           latency_model=latency_model)
         if not cands:
             raise ValueError(f"no feasible candidate for layer {layer.name} "
                              f"({layer.M}x{layer.K}x{layer.N}) on {platform.name}")

@@ -1,13 +1,18 @@
 """Docs-sync guard: docs/ISA.md is the enforced reference for
 ``core/isa.py`` — every enum member and body field must be documented,
 and every opcode documented must exist — docs/ARCHITECTURE.md must
-mention every core module, and docs/SCHEDULING.md must name every
-stage-2 engine, arbitration policy, QoS knob, and QoS accounting field
-(plus the benchmark's documented CLI flags must actually exist).  This
-is what keeps the docs from rotting silently when the ISA, the
-pipeline, or the scheduling/QoS contract changes."""
+mention every core module, docs/SCHEDULING.md must name every stage-2
+engine, arbitration policy, QoS knob, and QoS accounting field (plus
+the benchmark's documented CLI flags must actually exist), and
+docs/PERF_MODEL.md must track the latency-pricing stack (every pricing
+function, bound symbol, and ``latency_model`` value it names must
+exist).  Every ``symbol (file.py:line)`` pointer in the docs must
+resolve to the symbol it claims to point at.  This is what keeps the
+docs from rotting silently when the ISA, the pipeline, the perf model,
+or the scheduling/QoS contract changes."""
 
 import dataclasses
+import inspect
 import os
 import re
 import subprocess
@@ -16,11 +21,16 @@ from pathlib import Path
 
 import pytest
 
-from repro.core.compiler import ENGINES, CompileOptions
+import repro.core as core_pkg
+from repro.core import perf_model as perf_model_mod
+from repro.core import schedule as schedule_mod
+from repro.core.compiler import ENGINES, CompileOptions, CompileResult
 from repro.core.isa import (Body, Epilogue, LMUBody, LmuRole, MIUBody,
                             MMUBody, OpType, SFUBody, UnitKind)
-from repro.core.multi_tenant import QOS_POLICIES
-from repro.core.perf_model import VC_ARBITRATIONS
+from repro.core.multi_tenant import QOS_POLICIES, MultiTenantWorkload
+from repro.core.perf_model import (LATENCY_MODELS, VC_ARBITRATIONS,
+                                   CandidateMode, DoraPlatform, Policy,
+                                   TilePlan)
 from repro.core.simulator import TenantSimStats
 
 pytestmark = pytest.mark.docs
@@ -30,6 +40,7 @@ DOCS = REPO / "docs"
 ISA_MD = DOCS / "ISA.md"
 ARCH_MD = DOCS / "ARCHITECTURE.md"
 SCHED_MD = DOCS / "SCHEDULING.md"
+PERF_MD = DOCS / "PERF_MODEL.md"
 CORE = REPO / "src" / "repro" / "core"
 
 
@@ -169,6 +180,166 @@ def test_scheduling_md_policies_exist_in_code(sched_tokens):
         - set(VC_ARBITRATIONS)
     assert not ghosts, (f"docs/SCHEDULING.md documents nonexistent "
                         f"arbitration policies: {ghosts}")
+
+
+# ------------------------------------------------ PERF_MODEL.md sync checks
+
+@pytest.fixture(scope="module")
+def perf_tokens() -> set[str]:
+    assert PERF_MD.is_file(), "docs/PERF_MODEL.md is missing"
+    return _code_spans(PERF_MD.read_text())
+
+
+def test_perf_model_md_documents_the_pricing_stack(perf_tokens):
+    """The latency stack the doc promises to walk through must all be
+    named: both pricing models, the share re-pricings, the stage-1
+    entry points, and the bound chain that consumes them."""
+    needed = {"layer_latency", "pipeline_layer_latency",
+              "plan_buffer_depth", "share_scaled_platform",
+              "mode_latency_at_share", "mode_dram_demand",
+              "layer_dram_bytes", "enumerate_layer_candidates",
+              "build_candidate_table", "interleave_aware_bound",
+              "oversubscription_aware_bound", "LATENCY_MODELS",
+              "CandidateMode", "latency_model"}
+    missing = needed - perf_tokens
+    assert not missing, (f"pricing-stack symbols missing from "
+                         f"docs/PERF_MODEL.md: {missing}")
+
+
+def _documentable_names() -> set[str]:
+    """Every name docs/PERF_MODEL.md may legitimately backtick as code:
+    public + private members of the pricing modules, dataclass fields
+    of the types it walks through, and the pricing functions'
+    parameter names."""
+    names: set[str] = set(dir(core_pkg)) | set(dir(perf_model_mod)) \
+        | set(dir(schedule_mod))
+    for cls in (CompileOptions, CompileResult, CandidateMode, TilePlan,
+                DoraPlatform, Policy, MultiTenantWorkload, TenantSimStats):
+        names |= {f.name for f in dataclasses.fields(cls)}
+    for fn in (perf_model_mod.layer_latency,
+               perf_model_mod.pipeline_layer_latency,
+               perf_model_mod.enumerate_layer_candidates,
+               perf_model_mod.build_candidate_table,
+               perf_model_mod.mode_latency_at_share,
+               perf_model_mod.mode_dram_demand,
+               perf_model_mod.layer_dram_bytes,
+               perf_model_mod.share_scaled_platform,
+               perf_model_mod.plan_buffer_depth):
+        names |= set(inspect.signature(fn).parameters)
+    return names
+
+
+def test_perf_model_md_names_only_real_symbols(perf_tokens):
+    """Ghost-symbol check: every token in the doc that *looks* like a
+    pricing/bound/knob symbol must exist in the code (catches renames
+    and deletions of anything the doc walks through)."""
+    symbol_like = {
+        t for t in perf_tokens
+        if t.endswith(("_latency", "_bound", "_demand", "_bytes",
+                       "_platform", "_model", "_share", "_shares"))
+        or re.fullmatch(
+            r"(_|pipeline_|plan_|mode_|layer_|enumerate_|build_|"
+            r"share_|max_)[a-z0-9_]+", t)}
+    ghosts = symbol_like - _documentable_names()
+    assert not ghosts, (f"docs/PERF_MODEL.md names nonexistent "
+                        f"symbols: {ghosts}")
+
+
+def test_perf_model_md_latency_model_values_match_code(perf_tokens):
+    """The knob row's value list must be exactly the code enum — both
+    directions (a missing or ghost model name fails)."""
+    text = PERF_MD.read_text()
+    m = re.search(r"`latency_model`[^|]*`LATENCY_MODELS`[^|]*?:"
+                  r"((?:\s*`[a-z_]+`\s*\\?\|?)+)", text)
+    assert m, "PERF_MODEL.md lost its latency_model value list"
+    documented = set(re.findall(r"`([a-z_]+)`", m.group(1)))
+    assert documented == set(LATENCY_MODELS), (
+        f"latency_model values drifted: doc {documented} vs "
+        f"code {set(LATENCY_MODELS)}")
+
+
+def test_scheduling_md_documents_latency_model(sched_tokens):
+    """The knob table in SCHEDULING.md includes the new stage-1 pricing
+    knob (the CompileOptions coverage test enforces the field; this
+    pins the cross-reference to PERF_MODEL.md as well)."""
+    assert "latency_model" in sched_tokens
+    assert "PERF_MODEL.md" in SCHED_MD.read_text()
+
+
+def test_bench_artifact_has_latency_model_rows():
+    """The committed artifact carries the analytic-vs-pipeline rows the
+    acceptance criteria point at: solo qwen3-4b's sched-vs-sim ratio
+    1.55x under analytic pricing, <= 1.15x under pipeline pricing, and
+    the bound chain ordered under both."""
+    import json
+
+    data = json.loads((REPO / "BENCH_multi_tenant.json").read_text())
+    assert any("latency_model" in rows for rows in data.values()), (
+        "no latency_model comparison rows in BENCH_multi_tenant.json")
+    for scenario, rows in data.items():
+        lm = rows.get("latency_model")
+        if not lm:
+            continue
+        for model in LATENCY_MODELS:
+            r = lm[model]
+            assert (r["joint_sched_s"] <= r["aware_sched_s"] + 1e-15
+                    <= r["oversub_sched_s"] + 2e-15), (
+                f"{scenario}/{model}: bound chain out of order")
+    qwen = data.get("llm_pair", {}).get("latency_model")
+    assert qwen, ("BENCH_multi_tenant.json lost its llm_pair "
+                  "latency_model rows (the solo qwen3-4b acceptance "
+                  "metric) — regenerate the full artifact, not just the "
+                  "CI smoke scenario")
+    assert qwen["analytic"]["solo"]["qwen3-4b"]["sim_to_sched_ratio"] > 1.4
+    assert qwen["pipeline"]["solo"]["qwen3-4b"]["sim_to_sched_ratio"] <= 1.15
+
+
+# ------------------------------------------- file:line pointer accuracy
+
+_PTR_ADJACENT = re.compile(
+    r"`([A-Za-z_][A-Za-z0-9_.]*)`\s*\(`([\w./-]+\.py):(\d+)(?:-(\d+))?`\)")
+_PTR_ANY = re.compile(r"`([\w./-]+\.py):(\d+)(?:-(\d+))?`")
+
+
+def _resolve_doc_path(path: str) -> Path | None:
+    if "/" in path:
+        p = REPO / path
+        return p if p.is_file() else None
+    for root in (CORE, REPO / "benchmarks", REPO / "tests",
+                 REPO / "src" / "repro" / "configs"):
+        p = root / path
+        if p.is_file():
+            return p
+    return None
+
+
+@pytest.mark.parametrize("doc", ["ARCHITECTURE.md", "SCHEDULING.md",
+                                 "PERF_MODEL.md", "ISA.md"])
+def test_doc_file_line_pointers_resolve(doc):
+    """Every `file.py:line` pointer must name an existing file and an
+    in-range line; when a backticked symbol directly precedes the
+    pointer, the symbol must actually occur near that line — the guard
+    that keeps pointers from drifting as the code moves."""
+    text = (DOCS / doc).read_text()
+    for path, lo, hi in _PTR_ANY.findall(text):
+        f = _resolve_doc_path(path)
+        assert f is not None, f"{doc}: pointer to unknown file {path!r}"
+        n_lines = len(f.read_text().splitlines())
+        assert int(lo) <= n_lines, (
+            f"{doc}: {path}:{lo} beyond end of file ({n_lines} lines)")
+        if hi:
+            assert int(lo) < int(hi) <= n_lines, f"{doc}: {path}:{lo}-{hi}"
+    for sym, path, lo, hi in _PTR_ADJACENT.findall(text):
+        f = _resolve_doc_path(path)
+        assert f is not None, f"{doc}: {sym} points at unknown {path!r}"
+        lines = f.read_text().splitlines()
+        start = max(0, int(lo) - 3)           # 1-indexed line - 2, slack
+        end = min(len(lines), int(hi or lo) + 6)
+        window = "\n".join(lines[start:end])
+        token = sym.rsplit(".", 1)[-1]
+        assert re.search(rf"\b{re.escape(token)}\b", window), (
+            f"{doc}: `{sym}` ({path}:{lo}) — symbol not found near that "
+            f"line; the pointer drifted")
 
 
 # ----------------------------------------------- benchmark CLI flag smoke
