@@ -48,6 +48,15 @@ full-bandwidth stage 1, per scenario: simulated wfq makespan, total
 DRAM traffic of the chosen modes, and the bound-vs-simulator gaps —
 low-share tenants shift to smaller, less MIU-hungry tiles.
 
+The ``compile`` rows instrument the joint compile's wall-clock cost per
+stage (``CompileResult.stage1_s`` / ``stage2_s`` / ``bounds_s`` /
+``codegen_s`` and the ``compile_s`` total) and the ``stage1_speed`` rows
+benchmark the vectorized stage-1 enumeration three ways: cold (memo
+cleared), memo-warm (every shape already cached), and the regression-
+locked scalar reference loop (``enumerate_layer_candidates_scalar``).
+``stage1_speedup`` = scalar / cold-vectorized; compare_bench.py gates
+CI on DSE-time regressions of these columns exactly like makespans.
+
 The ``latency_model`` rows compare the two stage-1 pricing models
 (``CompileOptions.latency_model``): per tenant compiled *solo*, the
 analytic table's schedule-vs-simulator ratio against the
@@ -69,9 +78,12 @@ Usage: PYTHONPATH=src python benchmarks/bench_multi_tenant.py
 from __future__ import annotations
 
 import json
+import time
 
 from repro.core import (LATENCY_MODELS, CompileOptions, DoraCompiler,
                         DoraPlatform, MultiTenantWorkload, Policy,
+                        build_candidate_table, candidate_memo_stats,
+                        clear_candidate_memo, enumerate_layer_candidates_scalar,
                         interleave_aware_bound, interleave_stream,
                         layer_dram_bytes, oversubscription_aware_bound,
                         simulate)
@@ -266,6 +278,69 @@ def stage1_cmp(scenario: str, vc: int = 2,
     return out
 
 
+def compile_times(scenario: str) -> dict:
+    """Per-stage wall-clock cost of the (cached) joint compile: stage-1
+    enumeration, stage-2 scheduling, analytic-bound computation, and
+    codegen, plus the ``compile_s`` total.  The times come from the
+    first compile of the scenario in this process (``_joint_compile``
+    caches the CompileResult), i.e. a cold stage-1 memo for the first
+    scenario and warm for shapes shared with earlier ones."""
+    _, res = _joint_compile(scenario)
+    return {
+        "stage1_s": res.stage1_s,
+        "stage2_s": res.stage2_s,
+        "bounds_s": res.bounds_s,
+        "codegen_s": res.codegen_s,
+        "compile_s": res.compile_s,
+    }
+
+
+def stage1_speed(scenario: str) -> dict:
+    """Stage-1 enumeration speed on the scenario's merged joint graph,
+    three ways: cold vectorized (process memo cleared first), memo-warm
+    (identical call again — every shape cached), and the
+    regression-locked scalar reference loop
+    (``enumerate_layer_candidates_scalar``, what stage 1 was before
+    vectorization).  ``stage1_speedup`` is scalar / cold-vectorized —
+    the acceptance floor is >= 3x on llm_pair — and
+    ``memo_hit_frac`` confirms the warm pass served every layer from
+    the memo."""
+    mt = MultiTenantWorkload(scenario)
+    for name, g in SCENARIOS[scenario]().items():
+        mt.add_tenant(name, g)
+    graph = mt.merge().graph
+
+    clear_candidate_memo()
+    t0 = time.perf_counter()
+    table_vec = build_candidate_table(graph, PLAT, Policy.dora())
+    cold_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    build_candidate_table(graph, PLAT, Policy.dora())
+    warm_s = time.perf_counter() - t0
+    stats = candidate_memo_stats()
+
+    t0 = time.perf_counter()
+    table_scalar = {
+        layer.id: enumerate_layer_candidates_scalar(layer, PLAT,
+                                                    Policy.dora())
+        for layer in graph.layers}
+    scalar_s = time.perf_counter() - t0
+
+    identical = all(table_vec[layer.id] == table_scalar[layer.id]
+                    for layer in graph.layers)
+    return {
+        "n_layers": len(graph.layers),
+        "stage1_vectorized_s": cold_s,
+        "stage1_memo_warm_s": warm_s,
+        "stage1_scalar_s": scalar_s,
+        "stage1_speedup": scalar_s / cold_s if cold_s > 0 else 0.0,
+        "memo_hit_frac": stats["table_hits"] / max(
+            stats["table_hits"] + stats["table_misses"], 1),
+        "scalar_identical": identical,
+    }
+
+
 def latency_model_cmp(scenario: str, vc: int = 2) -> dict:
     """Analytic vs pipeline stage-1 pricing on one scenario
     (``CompileOptions.latency_model``).  Per tenant compiled *solo*:
@@ -428,6 +503,18 @@ def main(emit, scenarios: tuple[str, ...] | None = None,
         results[scenario]["latency_model"] = lm_row
         emit_latency_model_cmp(emit, scenario, lm_row)
 
+    # compile-time instrumentation + stage-1 enumeration speed (cold
+    # vectorized vs memo-warm vs scalar reference); stage1_speed clears
+    # the process memo, so it runs after every compile-dependent row
+    for scenario in selected:
+        ct = compile_times(scenario)
+        results[scenario]["compile"] = ct
+        emit_compile_times(emit, scenario, ct)
+    for scenario in selected:
+        sp = stage1_speed(scenario)
+        results[scenario]["stage1_speed"] = sp
+        emit_stage1_speed(emit, scenario, sp)
+
     # weighted-fair QoS sweep: 3 tenants, explicit shares, wfq MIU
     if "small_trio" in selected:
         sw = qos_sweep()
@@ -463,6 +550,24 @@ def emit_stage1_cmp(emit, scenario: str, cmp_row: dict) -> None:
     emit(f"{pre}.sim_speedup", cmp_row["stage1_sim_speedup"],
          f"share-aware vs full-bandwidth stage 1 (dram bytes ratio="
          f"{cmp_row['stage1_dram_bytes_ratio']:.3f})")
+
+
+def emit_compile_times(emit, scenario: str, ct: dict) -> None:
+    pre = f"multi_tenant.{scenario}.compile"
+    emit(f"{pre}.compile_s", ct["compile_s"],
+         f"stage1={ct['stage1_s']:.6g} stage2={ct['stage2_s']:.6g} "
+         f"bounds={ct['bounds_s']:.6g} codegen={ct['codegen_s']:.6g}")
+
+
+def emit_stage1_speed(emit, scenario: str, sp: dict) -> None:
+    pre = f"multi_tenant.{scenario}.stage1_speed"
+    emit(f"{pre}.stage1_speedup", sp["stage1_speedup"],
+         f"scalar={sp['stage1_scalar_s']:.6g} over "
+         f"vectorized={sp['stage1_vectorized_s']:.6g} "
+         f"({sp['n_layers']} layers, "
+         f"scalar_identical={sp['scalar_identical']})")
+    emit(f"{pre}.memo_warm_s", sp["stage1_memo_warm_s"],
+         f"memo_hit_frac={sp['memo_hit_frac']:.3f}")
 
 
 def emit_latency_model_cmp(emit, scenario: str, lm_row: dict) -> None:

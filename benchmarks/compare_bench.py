@@ -16,8 +16,17 @@ change, so they are reported but never gated.  Only paths present in
 ``--scenario small_pair`` smoke) gates just the scenarios it re-ran,
 and newly added rows never fail against an older baseline.
 
+Compile-time (DSE) rows gate separately: the per-scenario ``compile``
+stage timings and the ``stage1_speed`` enumeration timings fail the
+build when they regress by more than ``--time-threshold`` (default
+25 %) *and* by more than 5 ms absolute — wall-clock noise dominates
+below that floor — and ``stage1_speedup`` (scalar over vectorized
+stage 1) gates in the opposite direction: a drop beyond the time
+threshold fails.
+
 Usage: PYTHONPATH=src python benchmarks/compare_bench.py fresh.json \
-           [--baseline BENCH_multi_tenant.json] [--threshold 0.10]
+           [--baseline BENCH_multi_tenant.json] [--threshold 0.10] \
+           [--time-threshold 0.25]
 """
 
 from __future__ import annotations
@@ -31,6 +40,14 @@ _GATED_SUFFIXES = ("_sim_s", "makespan_s")
 _GATED_EXACT = ("sim_s",)
 # parents whose (name -> float) children are per-tenant simulations
 _GATED_PARENTS = ("solo_sim",)
+# DSE wall-clock leaves: compile stage timings and the stage-1
+# enumeration benchmark; gated at --time-threshold with an absolute
+# noise floor (timer jitter dominates sub-5ms rows)
+_TIME_PARENTS = ("compile",)
+_TIME_KEYS = ("stage1_vectorized_s", "stage1_memo_warm_s")
+# higher-is-better DSE rows: a *drop* beyond --time-threshold fails
+_TIME_HIGHER_BETTER = ("stage1_speedup",)
+_TIME_FLOOR_S = 0.005
 
 
 def _is_gated(path: tuple[str, ...]) -> bool:
@@ -39,6 +56,11 @@ def _is_gated(path: tuple[str, ...]) -> bool:
         return True
     return key in _GATED_EXACT or any(key.endswith(s)
                                       for s in _GATED_SUFFIXES)
+
+
+def _is_time_gated(path: tuple[str, ...]) -> bool:
+    return (path[-1] in _TIME_KEYS
+            or (len(path) >= 2 and path[-2] in _TIME_PARENTS))
 
 
 def flatten(node, prefix: tuple[str, ...] = ()) -> dict[tuple[str, ...], float]:
@@ -52,27 +74,45 @@ def flatten(node, prefix: tuple[str, ...] = ()) -> dict[tuple[str, ...], float]:
     return out
 
 
-def compare(fresh: dict, baseline: dict, threshold: float
-            ) -> tuple[list[str], list[str]]:
-    """(regressions, improvements) among the gated makespan leaves
-    present in both artifacts."""
+def compare(fresh: dict, baseline: dict, threshold: float,
+            time_threshold: float = 0.25) -> tuple[list[str], list[str]]:
+    """(regressions, improvements) among the gated makespan and
+    DSE-time leaves present in both artifacts."""
     f, b = flatten(fresh), flatten(baseline)
     regressions: list[str] = []
     improvements: list[str] = []
     for path in sorted(set(f) & set(b)):
-        if not _is_gated(path):
-            continue
         base, new = b[path], f[path]
         if base <= 0.0:
             continue
         rel = new / base - 1.0
         label = ".".join(path)
-        if rel > threshold:
-            regressions.append(
-                f"{label}: {base:.6g} -> {new:.6g} (+{rel * 100:.1f}%)")
-        elif rel < -threshold:
-            improvements.append(
-                f"{label}: {base:.6g} -> {new:.6g} ({rel * 100:.1f}%)")
+        if _is_gated(path):
+            if rel > threshold:
+                regressions.append(
+                    f"{label}: {base:.6g} -> {new:.6g} (+{rel * 100:.1f}%)")
+            elif rel < -threshold:
+                improvements.append(
+                    f"{label}: {base:.6g} -> {new:.6g} ({rel * 100:.1f}%)")
+        elif _is_time_gated(path):
+            # DSE wall clock: relative gate plus an absolute noise floor
+            if rel > time_threshold and new - base > _TIME_FLOOR_S:
+                regressions.append(
+                    f"{label}: {base:.6g}s -> {new:.6g}s "
+                    f"(+{rel * 100:.1f}% DSE time)")
+            elif rel < -time_threshold and base - new > _TIME_FLOOR_S:
+                improvements.append(
+                    f"{label}: {base:.6g}s -> {new:.6g}s "
+                    f"({rel * 100:.1f}% DSE time)")
+        elif path[-1] in _TIME_HIGHER_BETTER:
+            if rel < -time_threshold:
+                regressions.append(
+                    f"{label}: {base:.6g}x -> {new:.6g}x "
+                    f"({rel * 100:.1f}% stage-1 speedup drop)")
+            elif rel > time_threshold:
+                improvements.append(
+                    f"{label}: {base:.6g}x -> {new:.6g}x "
+                    f"(+{rel * 100:.1f}%)")
     return regressions, improvements
 
 
@@ -85,6 +125,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="max tolerated relative makespan regression "
                          "(default: %(default)s)")
+    ap.add_argument("--time-threshold", type=float, default=0.25,
+                    help="max tolerated relative DSE compile-time "
+                         "regression / stage-1 speedup drop "
+                         "(default: %(default)s)")
     args = ap.parse_args(argv)
 
     with open(args.fresh) as fh:
@@ -92,16 +136,20 @@ def main(argv: list[str] | None = None) -> int:
     with open(args.baseline) as fh:
         baseline = json.load(fh)
 
-    regressions, improvements = compare(fresh, baseline, args.threshold)
-    n_gated = sum(1 for p in set(flatten(fresh)) & set(flatten(baseline))
-                  if _is_gated(p))
+    regressions, improvements = compare(fresh, baseline, args.threshold,
+                                        args.time_threshold)
+    both = set(flatten(fresh)) & set(flatten(baseline))
+    n_gated = sum(1 for p in both if _is_gated(p))
+    n_time = sum(1 for p in both
+                 if _is_time_gated(p) or p[-1] in _TIME_HIGHER_BETTER)
     print(f"compared {n_gated} simulated-makespan rows "
-          f"(threshold {args.threshold * 100:.0f}%)")
+          f"(threshold {args.threshold * 100:.0f}%) and {n_time} "
+          f"DSE-time rows (threshold {args.time_threshold * 100:.0f}%)")
     for line in improvements:
         print(f"  improved   {line}")
     if regressions:
-        print(f"FAIL: {len(regressions)} makespan regression(s) "
-              f"beyond {args.threshold * 100:.0f}%:", file=sys.stderr)
+        print(f"FAIL: {len(regressions)} makespan/DSE-time "
+              f"regression(s):", file=sys.stderr)
         for line in regressions:
             print(f"  regressed  {line}", file=sys.stderr)
         return 1

@@ -16,14 +16,17 @@ from .multi_tenant import (QOS_POLICIES, MergedWorkload, MultiTenantWorkload,
 from .partition import PartitionedResult, partitioned_solve, split_segments
 from .perf_model import (LATENCY_MODELS, VC_ARBITRATIONS, CandidateMode,
                          DoraPlatform, Policy, TilePlan, TpuGemmTiles,
-                         build_candidate_table, enumerate_layer_candidates,
+                         build_candidate_table, candidate_memo_stats,
+                         clear_candidate_memo, enumerate_layer_candidates,
+                         enumerate_layer_candidates_scalar,
                          layer_dram_bytes, layer_latency, mode_dram_demand,
                          mode_latency_at_share, pipeline_layer_latency,
                          plan_buffer_depth, plan_tpu_gemm_tiles,
                          share_scaled_platform, single_pe_efficiency)
 from .runtime import DoraRuntime
 from .schedule import (InterleaveBound, OversubscriptionBound, Schedule,
-                       ScheduleEntry, interleave_aware_bound, list_schedule,
+                       ScheduleEntry, dispatch_overlap_s,
+                       interleave_aware_bound, list_schedule,
                        oversubscription_aware_bound, sequential_schedule)
 from .simulator import SimReport, TenantSimStats, simulate
 

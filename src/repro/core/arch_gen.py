@@ -61,7 +61,13 @@ def evaluate_template(template: ArchTemplate,
     pricing model: pipeline pricing scores templates by the fill/drain
     and MIU-serialization costs the emitted stream actually pays, so
     a search stops over-crediting configurations that only look good
-    under the perfect-overlap assumption."""
+    under the perfect-overlap assumption.
+
+    Repeated evaluations hit the process-level stage-1 memo
+    (``perf_model.build_candidate_table``): the memo key includes the
+    generated platform, so each template prices each distinct layer
+    shape once and a search over K templates with repeated shapes pays
+    enumeration only for the unique (shape, platform) pairs."""
     policy = policy or Policy.dora()
     platform = generate_platform(template)
     total = 0.0

@@ -81,9 +81,15 @@ class CompileResult:
     candidates: dict[int, list[CandidateMode]]
     schedule: Schedule
     codegen: CodegenResult
+    # per-stage compile-time instrumentation (wall-clock seconds):
+    # stage-1 candidate enumeration, stage-2 scheduling engine, the QoS
+    # schedule-bound replays, and code generation.  The benchmark emits
+    # these per scenario and compare_bench.py gates CI on DSE-time
+    # regressions exactly like makespans.
     stage1_s: float
     stage2_s: float
     codegen_s: float
+    bounds_s: float = 0.0
     solver_trace: list[tuple[float, float]] = field(default_factory=list)
     optimal: bool | None = None
     # multi-tenant compilations only:
@@ -100,6 +106,12 @@ class CompileResult:
     # the resolved stage-1 pricing model (CompileOptions.latency_model;
     # None resolves to "analytic"):
     latency_model: str = "analytic"
+
+    @property
+    def compile_s(self) -> float:
+        """Total wall-clock compile time across all instrumented stages
+        (stage 1 + stage 2 + schedule bounds + codegen)."""
+        return self.stage1_s + self.stage2_s + self.bounds_s + self.codegen_s
 
     @property
     def makespan_s(self) -> float:
@@ -271,6 +283,7 @@ class DoraCompiler:
             oversub_bound = oversubscription_aware_bound(
                 schedule, graph, self.platform, self.policy, tenant_of,
                 shares, release=release, interleave_bound=qos_bound)
+        t_bounds = time.perf_counter()
         ilv_prios = None
         if mt_workload is not None:
             # the priority interleave weights channels by the guaranteed
@@ -283,9 +296,13 @@ class DoraCompiler:
         t3 = time.perf_counter()
 
         return CompileResult(graph, self.platform, self.policy, candidates,
-                             schedule, cg, t1 - t0, t2 - t1, t3 - t2,
-                             trace, optimal, mt_workload, tenant_of, release,
-                             shares, qos_bound, oversub_bound,
+                             schedule, cg, t1 - t0, t2 - t1, t3 - t_bounds,
+                             bounds_s=t_bounds - t2,
+                             solver_trace=trace, optimal=optimal,
+                             workload=mt_workload, tenant_of=tenant_of,
+                             release=release, bandwidth_shares=shares,
+                             qos_bound=qos_bound,
+                             oversubscription_bound=oversub_bound,
                              share_aware_stage1=bool(share_aware),
                              latency_model=latency_model)
 

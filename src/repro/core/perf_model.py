@@ -23,6 +23,8 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from functools import lru_cache
 
+import numpy as np
+
 from .graph import Layer, LayerKind, NonLinear, WorkloadGraph
 
 
@@ -357,12 +359,22 @@ def layer_latency(layer: Layer, plan: TilePlan, platform: DoraPlatform,
 
     total = iters * iter_t + platform.startup_s
 
-    # fused non-linearity: row-streaming overlaps at tile granularity; an
-    # SFU adds only the drain of the last tile, unless no SFU is granted,
-    # in which case the NL runs as a separate streamed pass.
+    # fused non-linearity, matching what codegen emits: element-wise NLs
+    # with the full output row on chip fold into the MMU epilogue of the
+    # last-k GEMM — zero extra instructions, zero simulator cost — so
+    # they price at nothing here.  Row-reduction NLs (softmax/layernorm)
+    # run on the SFU between the last GEMM and the STORE; row-streaming
+    # overlaps at tile granularity, so an SFU adds only the drain of the
+    # last tile.  Without an SFU grant (or with the row split across
+    # tiles) codegen falls back to a separate streamed pass that re-reads
+    # and re-writes the output through DRAM.
     if layer.nonlinear is not None:
         nl_t = M * N / (platform.sfu_elems_per_cycle * platform.freq_pl_hz)
-        if n_sfu >= 1:
+        elementwise = layer.nonlinear not in (NonLinear.SOFTMAX,
+                                              NonLinear.LAYERNORM)
+        if n_sfu >= 1 and ln >= N_eff and elementwise:
+            pass                          # free MMU epilogue
+        elif n_sfu >= 1:
             total = max(total, nl_t) + nl_t / max(iters, 1)
         else:
             total += nl_t + 2 * M * N * platform.dtype_bytes / platform.dram_bw_bytes
@@ -518,14 +530,22 @@ def pipeline_layer_latency(layer: Layer, plan: TilePlan | None,
                     g1 = max(g1, mend) + g_t
             last = g1
         else:
-            # closed-form steady state for huge k grids: prologue fill,
-            # then every iteration advances the pipe by its bottleneck
-            # period — the slowest stage, or the whole serial chain
-            # split across the buffer depth when no stage dominates.
-            l0, m0, _ = _iter_times(mr, nr, k_classes[0][0])
-            last = l0 + m0
+            # closed-form steady state for huge k grids: the first
+            # iteration runs its full serial chain (the pipeline fill —
+            # its GEMM cannot start before its own load and stream-in),
+            # then every later iteration advances the pipe by its
+            # bottleneck period — the slowest stage, or the whole serial
+            # chain split across the buffer depth when no stage
+            # dominates.  Charging the fill *and* a full period for
+            # iteration 0 would double-count the prologue per group.
+            last = 0.0
+            first = True
             for ks, cnt in k_classes:
                 l_t, m_t, g_t = _iter_times(mr, nr, ks)
+                if first:
+                    last = l_t + m_t + g_t
+                    cnt -= 1
+                    first = False
                 last += cnt * max(l_t, m_t, g_t, (l_t + m_t + g_t) / depth)
         if fused_sfu:
             last += mr * nr / (platform.sfu_elems_per_cycle
@@ -550,6 +570,58 @@ def pipeline_layer_latency(layer: Layer, plan: TilePlan | None,
                                         * platform.freq_pl_hz)
             total += nl_t + 2 * layer.M * layer.N * dsz / bw
     return max(total, analytic)
+
+
+# ---------------------------------------------------------------------------
+# Process-level stage-1 memoization
+# ---------------------------------------------------------------------------
+#
+# Stage-1 pricing is a pure function of (layer shape, platform, policy,
+# share, latency_model, max_mmu): transformer stacks repeat the same few
+# shapes dozens of times, every tenant of a multi-tenant compile repeats
+# its neighbours' shapes, and the schedule bounds re-price the same rows
+# at the same shares on every replay.  Two process-level memos exploit
+# that: ``_TABLE_MEMO`` caches whole candidate-table rows for
+# ``build_candidate_table``; ``_REPRICE_MEMO`` caches the scalar
+# re-pricings behind ``mode_latency_at_share`` / ``mode_dram_demand``
+# (the schedule bounds' hot loop).  Both are bounded (FIFO eviction) and
+# resettable via ``clear_candidate_memo`` — the benchmark's cold/warm
+# stage-1 timing hook.
+
+_TABLE_MEMO: dict[tuple, tuple[CandidateMode, ...]] = {}
+_REPRICE_MEMO: dict[tuple, float] = {}
+_MEMO_STATS = {"table_hits": 0, "table_misses": 0,
+               "reprice_hits": 0, "reprice_misses": 0}
+_TABLE_MEMO_CAP = 4096
+_REPRICE_MEMO_CAP = 65536
+
+
+def _layer_signature(layer: Layer) -> tuple:
+    """The shape signature stage-1 pricing depends on: two layers with
+    equal signatures get identical candidate rows (modulo ``layer_id``).
+    ``Layer`` itself is mutable/unhashable, so memo keys use this."""
+    return (layer.kind, layer.M, layer.K, layer.N, layer.nonlinear)
+
+
+def clear_candidate_memo() -> None:
+    """Drop every process-level stage-1 memo entry (candidate tables and
+    bound re-pricings) and zero the hit counters."""
+    _TABLE_MEMO.clear()
+    _REPRICE_MEMO.clear()
+    for k in _MEMO_STATS:
+        _MEMO_STATS[k] = 0
+
+
+def candidate_memo_stats() -> dict[str, int]:
+    """Snapshot of the stage-1 memo counters and current sizes."""
+    return {**_MEMO_STATS, "table_size": len(_TABLE_MEMO),
+            "reprice_size": len(_REPRICE_MEMO)}
+
+
+def _memo_put(memo: dict, cap: int, key: tuple, value) -> None:
+    if len(memo) >= cap:
+        memo.pop(next(iter(memo)))    # FIFO: dicts keep insertion order
+    memo[key] = value
 
 
 # ---------------------------------------------------------------------------
@@ -581,14 +653,27 @@ def mode_latency_at_share(layer: Layer, mode: "CandidateMode",
     The re-pricing honours the model the row was built under
     (``mode.latency_model``): a pipeline-priced row is re-priced with
     ``pipeline_layer_latency``, keeping the schedule bounds' ordering
-    intact under either stage-1 pricing."""
+    intact under either stage-1 pricing.  Results are memoized
+    process-wide (``_REPRICE_MEMO``): the schedule bounds re-price the
+    same (shape, plan, share) triples on every replay and across
+    repeated layers, so the bound loops hit instead of re-walking the
+    pipeline model."""
     if share >= 1.0:
         return mode.latency_s
+    key = ("lat", _layer_signature(layer), mode.plan, mode.n_sfu,
+           mode.latency_model, share, platform, policy)
+    hit = _REPRICE_MEMO.get(key)
+    if hit is not None:
+        _MEMO_STATS["reprice_hits"] += 1
+        return hit
+    _MEMO_STATS["reprice_misses"] += 1
     scaled = share_scaled_platform(platform, share)
     price = (pipeline_layer_latency if mode.latency_model == "pipeline"
              else layer_latency)
-    return price(layer, mode.plan, scaled, policy,
-                 n_sfu=mode.n_sfu)
+    val = price(layer, mode.plan, scaled, policy,
+                n_sfu=mode.n_sfu)
+    _memo_put(_REPRICE_MEMO, _REPRICE_MEMO_CAP, key, val)
+    return val
 
 
 def layer_dram_bytes(layer: Layer, plan: TilePlan | None,
@@ -632,7 +717,16 @@ def mode_dram_demand(layer: Layer, mode: "CandidateMode",
     (pipeline-priced rows spread the same bytes over the longer
     pipeline latency, so their average demand is lower).  NL candidates
     carry no plan; ``layer_latency``'s NL branch ignores the plan, so a
-    placeholder is enough to re-price them."""
+    placeholder is enough to re-price them.  Memoized process-wide
+    (``_REPRICE_MEMO``) for the oversubscription bound's per-window
+    demand splits."""
+    key = ("demand", _layer_signature(layer), mode.plan, mode.n_sfu,
+           mode.latency_model, mode.latency_s, platform, policy)
+    hit = _REPRICE_MEMO.get(key)
+    if hit is not None:
+        _MEMO_STATS["reprice_hits"] += 1
+        return hit
+    _MEMO_STATS["reprice_misses"] += 1
     price = (pipeline_layer_latency if mode.latency_model == "pipeline"
              else layer_latency)
     if mode.plan is not None:
@@ -645,9 +739,12 @@ def mode_dram_demand(layer: Layer, mode: "CandidateMode",
     else:
         lat = mode.latency_s
     if lat <= 0.0:
-        return 0.0
-    bytes_total = layer_dram_bytes(layer, mode.plan, platform, policy)
-    return min(1.0, bytes_total / lat / platform.dram_bw_bytes)
+        val = 0.0
+    else:
+        bytes_total = layer_dram_bytes(layer, mode.plan, platform, policy)
+        val = min(1.0, bytes_total / lat / platform.dram_bw_bytes)
+    _memo_put(_REPRICE_MEMO, _REPRICE_MEMO_CAP, key, val)
+    return val
 
 
 # ---------------------------------------------------------------------------
@@ -655,6 +752,10 @@ def mode_dram_demand(layer: Layer, mode: "CandidateMode",
 # ---------------------------------------------------------------------------
 
 _AIE_TILE_MENU = (8, 16, 32, 64)
+# on-chip reuse factors: grow the LMU tile while it fits
+_REUSE_M = (1, 2, 4, 8)
+_REUSE_N = (1, 2, 4, 8)
+_REUSE_K = (1, 2, 4)
 
 
 def _pe_tile_options(platform: DoraPlatform, policy: Policy):
@@ -685,6 +786,247 @@ def _mmu_grid_options(n_mmu: int, policy: Policy,
             yield (gm, gn)
 
 
+def _check_enum_args(bandwidth_share: float, latency_model: str) -> None:
+    if not 0.0 < bandwidth_share <= 1.0:
+        raise ValueError(
+            f"bandwidth_share must be in (0, 1], got {bandwidth_share}")
+    if latency_model not in LATENCY_MODELS:
+        raise ValueError(f"unknown latency_model {latency_model!r}; "
+                         f"expected one of {LATENCY_MODELS}")
+
+
+def _nl_candidate(layer: Layer, platform: DoraPlatform,
+                  pricing: DoraPlatform, policy: Policy, price,
+                  bandwidth_share: float, latency_model: str
+                  ) -> list[CandidateMode]:
+    """NL layers have one streamed execution mode — no tile grid."""
+    lmus, _ = _operand_lmus(layer.M, layer.N, platform, policy)
+    lat = price(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
+                                layer.N, 1, 0, 1), pricing,
+                policy, n_sfu=1)
+    return [CandidateMode(layer.id, 0, min(lmus, platform.n_lmu), 0, 1,
+                          lat, None, priced_share=bandwidth_share,
+                          latency_model=latency_model)]
+
+
+def _skip_grid(gm: int, gn: int, platform: DoraPlatform,
+               policy: Policy) -> bool:
+    return policy.monolithic and gm * gn < min(
+        platform.n_mmu, (policy.fixed_mmu_grid or (1, 1))[0]
+        * (policy.fixed_mmu_grid or (1, 1))[1])
+
+
+def _pareto_cap(cands: list[CandidateMode],
+                max_modes: int) -> list[CandidateMode]:
+    """Pareto prune (resources vs latency), cap, re-id."""
+    pareto: list[CandidateMode] = []
+    for c in sorted(cands, key=lambda c: (c.latency_s, c.n_mmu, c.n_lmu)):
+        if not any(p.dominates(c) for p in pareto):
+            pareto.append(c)
+    pareto = pareto[:max_modes]
+    return [replace(c, mode_id=i) for i, c in enumerate(pareto)]
+
+
+def _grid_combo_arrays(layer: Layer, platform: DoraPlatform,
+                       policy: Policy, gm: int, gn: int,
+                       pe_opts: tuple[tuple[int, int, int], ...]):
+    """All (pe tile x reuse) combos of one (gm, gn) MMU grid as int64
+    arrays of shape (P, |rm|, |rn|, |rk|) — C-order ravel matches the
+    scalar reference loop's iteration order exactly, which is what makes
+    the vectorized tie-breaking bit-for-bit identical.
+
+    Returns (launch_m, launch_k, launch_n, lm, lk, ln, n_lmu, feasible);
+    the capacity check runs on the *physical* platform, like the scalar
+    loop, regardless of any share-scaled pricing platform."""
+    M, K, N = layer.M, layer.K, layer.N
+    P = len(pe_opts)
+    am = np.asarray([o[0] for o in pe_opts], dtype=np.int64).reshape(P, 1, 1, 1)
+    ak = np.asarray([o[1] for o in pe_opts], dtype=np.int64).reshape(P, 1, 1, 1)
+    an = np.asarray([o[2] for o in pe_opts], dtype=np.int64).reshape(P, 1, 1, 1)
+    rm = np.asarray(_REUSE_M, dtype=np.int64).reshape(1, -1, 1, 1)
+    rn = np.asarray(_REUSE_N, dtype=np.int64).reshape(1, 1, -1, 1)
+    rk = np.asarray(_REUSE_K, dtype=np.int64).reshape(1, 1, 1, -1)
+    launch_m, launch_k, launch_n = am * 4 * gm, ak * 4, an * 4 * gn
+
+    def rup(x, b):
+        return -(-x // b) * b
+
+    lm = np.minimum(launch_m * rm, rup(M, launch_m))
+    lk = np.minimum(launch_k * rk, rup(K, launch_k))
+    ln = np.minimum(launch_n * rn, rup(N, launch_n))
+
+    def op_lmus(rows, cols):
+        # vectorized _operand_lmus (LMU count only)
+        if not policy.flexible_memory:
+            g = policy.buffer_granularity
+            rows, cols = rup(rows, g), rup(cols, g)
+        need = 2 * rows * cols * platform.dtype_bytes
+        return np.maximum(1, -(-need // platform.lmu_bytes))
+
+    l_nl = 1 if layer.nonlinear is not None else 0
+    n_lmu = op_lmus(lm, lk) + op_lmus(lk, ln) + op_lmus(lm, ln) + l_nl
+    feasible = n_lmu <= platform.n_lmu
+    return launch_m, launch_k, launch_n, lm, lk, ln, n_lmu, feasible
+
+
+def _analytic_latency_array(layer: Layer, pricing: DoraPlatform,
+                            policy: Policy, n_sfu: int,
+                            launch_m, launch_k, launch_n,
+                            lm, lk, ln) -> np.ndarray:
+    """``layer_latency``'s MM path over a whole combo array at once,
+    replicating the scalar arithmetic operation for operation (same
+    int->float conversions, same division and max order) so every
+    element is bit-for-bit the scalar result."""
+    M, K, N = layer.M, layer.K, layer.N
+    if not policy.flexible_memory:
+        g = policy.buffer_granularity
+        M_eff, K_eff, N_eff = round_up(M, g), round_up(K, g), round_up(N, g)
+    else:
+        M_eff, K_eff, N_eff = M, K, N
+
+    def rup(x, b):
+        return -(-x // b) * b
+
+    def cdiv(a, b):
+        return -(-a // b)
+
+    lm = np.minimum(lm, rup(M_eff, launch_m))
+    lk = np.minimum(lk, rup(K_eff, launch_k))
+    ln = np.minimum(ln, rup(N_eff, launch_n))
+    launches = cdiv(lm, launch_m) * cdiv(lk, launch_k) * cdiv(ln, launch_n)
+    lc = np.asarray(
+        [_launch_cycles_cached(min(int(bm), M_eff), int(bk),
+                               min(int(bn), N_eff), pricing, policy)
+         for bm, bk, bn in zip(launch_m.ravel(), launch_k.ravel(),
+                               launch_n.ravel())],
+        dtype=np.int64).reshape(launch_m.shape)
+    compute_t = launches * lc / pricing.freq_mmu_hz
+
+    stream_bytes = (lm * lk + lk * ln) * pricing.dtype_bytes
+    stream_t = stream_bytes / (pricing.stream_bw_bytes * pricing.mmu_ports)
+
+    dram_bytes = (lm * lk + lk * ln) * pricing.dtype_bytes
+    k_iters = cdiv(K_eff, lk)
+    out_bytes = lm * ln * pricing.dtype_bytes / k_iters
+    dram_t = (dram_bytes + out_bytes) / pricing.dram_bw_bytes
+
+    iter_t = np.maximum(np.maximum(compute_t, stream_t), dram_t) \
+        + pricing.sync_overhead_s
+    iters = cdiv(M_eff, lm) * k_iters * cdiv(N_eff, ln)
+    total = iters * iter_t + pricing.startup_s
+
+    if layer.nonlinear is not None:
+        nl_t = M * N / (pricing.sfu_elems_per_cycle * pricing.freq_pl_hz)
+        elementwise = layer.nonlinear not in (NonLinear.SOFTMAX,
+                                              NonLinear.LAYERNORM)
+        if n_sfu >= 1:
+            charged = np.maximum(total, nl_t) + nl_t / np.maximum(iters, 1)
+            total = np.where(ln >= N_eff, total, charged) if elementwise \
+                else charged
+        else:
+            total = total + nl_t \
+                + 2 * M * N * pricing.dtype_bytes / pricing.dram_bw_bytes
+    return total
+
+
+def _lex_argmin(lat: np.ndarray, n_lmu: np.ndarray) -> int:
+    """First index of the lexicographic minimum over (lat, n_lmu, index)
+    — the scalar loop's best-for-grid update rule."""
+    sel = lat == lat.min()
+    sel &= n_lmu == n_lmu[sel].min()
+    return int(np.argmax(sel))
+
+
+def _combo_plan(layer: Layer, platform: DoraPlatform, policy: Policy,
+                gm: int, gn: int,
+                pe_opts: tuple[tuple[int, int, int], ...],
+                flat_idx: int, shape: tuple[int, ...]) -> TilePlan:
+    """Materialize the TilePlan of one flat combo index, with exactly
+    the scalar loop's integer arithmetic."""
+    p, irm, irn, irk = np.unravel_index(flat_idx, shape)
+    am, ak, an = pe_opts[p]
+    launch_m, launch_k, launch_n = am * 4 * gm, ak * 4, an * 4 * gn
+    lm = min(launch_m * _REUSE_M[irm], round_up(layer.M, launch_m))
+    lk = min(launch_k * _REUSE_K[irk], round_up(layer.K, launch_k))
+    ln = min(launch_n * _REUSE_N[irn], round_up(layer.N, launch_n))
+    l_lhs, _ = _operand_lmus(lm, lk, platform, policy)
+    l_rhs, _ = _operand_lmus(lk, ln, platform, policy)
+    l_out, _ = _operand_lmus(lm, ln, platform, policy)
+    l_nl = 1 if layer.nonlinear is not None else 0
+    return TilePlan(am, ak, an, gm, gn, lm, lk, ln,
+                    l_lhs, l_rhs, l_out, l_nl)
+
+
+def _grid_best_vectorized(layer: Layer, platform: DoraPlatform,
+                          pricing: DoraPlatform, policy: Policy,
+                          gm: int, gn: int,
+                          pe_opts: tuple[tuple[int, int, int], ...],
+                          bandwidth_share: float, latency_model: str
+                          ) -> CandidateMode | None:
+    """Winner of one (gm, gn) MMU grid over every (pe tile, reuse)
+    combo — identical (value and tie-break) to the scalar inner loop.
+
+    Analytic pricing is batched over the whole combo array.  For
+    pipeline pricing the analytic array is the exact prune:
+    ``pipeline >= analytic`` per row, so after seeding the bound with
+    the pipeline latency of the analytic argmin combo, any combo whose
+    analytic latency exceeds the bound is strictly slower than the
+    winner and provably cannot win or tie; the survivors are walked in
+    original order with the scalar update rule."""
+    if not pe_opts:
+        return None
+    needs_sfu = layer.nonlinear is not None
+    n_sfu = 1 if needs_sfu else 0
+    (launch_m, launch_k, launch_n,
+     lm, lk, ln, n_lmu, feasible) = _grid_combo_arrays(
+        layer, platform, policy, gm, gn, pe_opts)
+    if not feasible.any():
+        return None
+    a_lat = _analytic_latency_array(layer, pricing, policy, n_sfu,
+                                    launch_m, launch_k, launch_n,
+                                    lm, lk, ln)
+    shape = np.broadcast_shapes(a_lat.shape, n_lmu.shape)
+    flat_lat = np.where(feasible, a_lat, np.inf).ravel()
+    flat_lmu = np.broadcast_to(n_lmu, shape).ravel()
+
+    best_idx = _lex_argmin(flat_lat, flat_lmu)
+    if latency_model != "pipeline":
+        plan = _combo_plan(layer, platform, policy, gm, gn, pe_opts,
+                           best_idx, shape)
+        return CandidateMode(layer.id, -1, int(flat_lmu[best_idx]), gm * gn,
+                             n_sfu, float(flat_lat[best_idx]), plan,
+                             priced_share=bandwidth_share,
+                             latency_model=latency_model)
+
+    seed_plan = _combo_plan(layer, platform, policy, gm, gn, pe_opts,
+                            best_idx, shape)
+    seed_lat = pipeline_layer_latency(layer, seed_plan, pricing, policy,
+                                      n_sfu=n_sfu,
+                                      analytic_floor=float(flat_lat[best_idx]))
+    best: CandidateMode | None = None
+    for i in np.flatnonzero(flat_lat <= seed_lat):
+        i = int(i)
+        if best is not None and flat_lat[i] > best.latency_s:
+            continue
+        if i == best_idx:
+            plan, lat = seed_plan, seed_lat
+        else:
+            plan = _combo_plan(layer, platform, policy, gm, gn, pe_opts,
+                               i, shape)
+            lat = pipeline_layer_latency(layer, plan, pricing, policy,
+                                         n_sfu=n_sfu,
+                                         analytic_floor=float(flat_lat[i]))
+        cand = CandidateMode(layer.id, -1, int(flat_lmu[i]), gm * gn,
+                             n_sfu, lat, plan,
+                             priced_share=bandwidth_share,
+                             latency_model=latency_model)
+        if (best is None or cand.latency_s < best.latency_s
+                or (cand.latency_s == best.latency_s
+                    and cand.n_lmu < best.n_lmu)):
+            best = cand
+    return best
+
+
 def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                                policy: Policy,
                                max_modes: int = 12,
@@ -694,6 +1036,15 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                                ) -> list[CandidateMode]:
     """Build the candidate table rows for one layer: Pareto-optimal
     (resources -> latency) execution modes (paper Fig. 8b).
+
+    The per-grid argmin over (pe tile x reuse) combos is numpy-batched
+    (``_grid_best_vectorized``): capacity masks, per-combo DRAM /
+    stream / compute terms, and the lexicographic argmin all run as
+    array operations, bit-for-bit identical to the scalar reference
+    loop (``enumerate_layer_candidates_scalar``, regression-locked).
+    Pipeline pricing keeps its exact analytic prune: the batched
+    analytic array bounds which combos ``pipeline_layer_latency`` must
+    walk, and only those survivors run the scalar pipeline model.
 
     ``max_mmu`` caps the MMUs any single mode may claim — the
     multi-tenant fairness knob: with several tenants resident, capping
@@ -718,43 +1069,64 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
     double-buffer depth) — monotonically >= analytic per row.  It
     composes with ``bandwidth_share``: pipeline rows priced at a share
     see the share-scaled DRAM term in every pipeline stage."""
-    if not 0.0 < bandwidth_share <= 1.0:
-        raise ValueError(
-            f"bandwidth_share must be in (0, 1], got {bandwidth_share}")
-    if latency_model not in LATENCY_MODELS:
-        raise ValueError(f"unknown latency_model {latency_model!r}; "
-                         f"expected one of {LATENCY_MODELS}")
+    _check_enum_args(bandwidth_share, latency_model)
     price = (pipeline_layer_latency if latency_model == "pipeline"
              else layer_latency)
     pricing = platform if bandwidth_share >= 1.0 else \
         share_scaled_platform(platform, bandwidth_share)
     if layer.kind is LayerKind.NL:
-        lmus, _ = _operand_lmus(layer.M, layer.N, platform, policy)
-        lat = price(layer, TilePlan(8, 8, 8, 1, 1, layer.M, 1,
-                                    layer.N, 1, 0, 1), pricing,
-                    policy, n_sfu=1)
-        return [CandidateMode(layer.id, 0, min(lmus, platform.n_lmu), 0, 1,
-                              lat, None, priced_share=bandwidth_share,
-                              latency_model=latency_model)]
+        return _nl_candidate(layer, platform, pricing, policy, price,
+                             bandwidth_share, latency_model)
+
+    pe_opts = tuple(_pe_tile_options(platform, policy))
+    cands: list[CandidateMode] = []
+    for (gm, gn) in _mmu_grid_options(platform.n_mmu, policy, max_mmu):
+        if _skip_grid(gm, gn, platform, policy):
+            continue
+        best = _grid_best_vectorized(layer, platform, pricing, policy,
+                                     gm, gn, pe_opts, bandwidth_share,
+                                     latency_model)
+        if best is not None:
+            cands.append(best)
+    return _pareto_cap(cands, max_modes)
+
+
+def enumerate_layer_candidates_scalar(layer: Layer, platform: DoraPlatform,
+                                      policy: Policy,
+                                      max_modes: int = 12,
+                                      max_mmu: int | None = None,
+                                      bandwidth_share: float = 1.0,
+                                      latency_model: str = "analytic"
+                                      ) -> list[CandidateMode]:
+    """Reference implementation of ``enumerate_layer_candidates``: the
+    original pure-Python 5-deep loop over (grid, pe tile, reuse)
+    combos.  Kept as the ground truth the vectorized path is
+    regression-locked against (bit-for-bit table equality under both
+    latency models and any share) — not for production use."""
+    _check_enum_args(bandwidth_share, latency_model)
+    price = (pipeline_layer_latency if latency_model == "pipeline"
+             else layer_latency)
+    pricing = platform if bandwidth_share >= 1.0 else \
+        share_scaled_platform(platform, bandwidth_share)
+    if layer.kind is LayerKind.NL:
+        return _nl_candidate(layer, platform, pricing, policy, price,
+                             bandwidth_share, latency_model)
 
     M, K, N = layer.M, layer.K, layer.N
     needs_sfu = layer.nonlinear is not None
     cands: list[CandidateMode] = []
     for (gm, gn) in _mmu_grid_options(platform.n_mmu, policy, max_mmu):
         n_mmu_used = gm * gn
-        if policy.monolithic and n_mmu_used < min(
-                platform.n_mmu, (policy.fixed_mmu_grid or (1, 1))[0]
-                * (policy.fixed_mmu_grid or (1, 1))[1]):
+        if _skip_grid(gm, gn, platform, policy):
             continue
         best_for_grid: CandidateMode | None = None
         for (am, ak, an) in _pe_tile_options(platform, policy):
             plan_launch_m = am * 4 * gm
             plan_launch_k = ak * 4
             plan_launch_n = an * 4 * gn
-            # on-chip reuse factors: grow the LMU tile while it fits
-            for rm in (1, 2, 4, 8):
-                for rn in (1, 2, 4, 8):
-                    for rk in (1, 2, 4):
+            for rm in _REUSE_M:
+                for rn in _REUSE_N:
+                    for rk in _REUSE_K:
                         lm = min(plan_launch_m * rm, round_up(M, plan_launch_m))
                         lk = min(plan_launch_k * rk, round_up(K, plan_launch_k))
                         ln = min(plan_launch_n * rn, round_up(N, plan_launch_n))
@@ -797,21 +1169,15 @@ def enumerate_layer_candidates(layer: Layer, platform: DoraPlatform,
                             best_for_grid = cand
         if best_for_grid is not None:
             cands.append(best_for_grid)
-
-    # Pareto prune + cap
-    pareto: list[CandidateMode] = []
-    for c in sorted(cands, key=lambda c: (c.latency_s, c.n_mmu, c.n_lmu)):
-        if not any(p.dominates(c) for p in pareto):
-            pareto.append(c)
-    pareto = pareto[:max_modes]
-    return [replace(c, mode_id=i) for i, c in enumerate(pareto)]
+    return _pareto_cap(cands, max_modes)
 
 
 def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
                           policy: Policy, max_mmu: int | None = None,
                           bandwidth_share: float = 1.0,
                           layer_shares: dict[int, float] | None = None,
-                          latency_model: str = "analytic"
+                          latency_model: str = "analytic",
+                          use_memo: bool = True
                           ) -> dict[int, list[CandidateMode]]:
     """Stage-1 output: layer id -> candidate modes (paper Fig. 6/8).
 
@@ -826,18 +1192,31 @@ def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
 
     ``latency_model`` ("analytic" | "pipeline") selects the per-row
     pricing model, see ``enumerate_layer_candidates``.  The defaults
-    reproduce the classic full-bandwidth analytic table bit for bit."""
+    reproduce the classic full-bandwidth analytic table bit for bit.
+
+    ``use_memo``: rows are memoized *process-wide* keyed on
+    (layer-shape signature, platform, policy, share, latency_model,
+    max_mmu) — repeated layers, co-tenant graphs with shared shapes,
+    template-search sweeps (``arch_gen``), and bound replays all reuse
+    enumerations instead of re-running them (``candidate_memo_stats`` /
+    ``clear_candidate_memo``).  ``use_memo=False`` falls back to a
+    call-local cache (same keys, no cross-call reuse)."""
     table: dict[int, list[CandidateMode]] = {}
-    cache: dict[tuple, list[CandidateMode]] = {}
+    local: dict[tuple, tuple[CandidateMode, ...]] = {}
     layer_shares = layer_shares or {}
     for layer in graph.topo_order():
         share = layer_shares.get(layer.id, bandwidth_share)
-        key = (layer.kind, layer.M, layer.K, layer.N, layer.nonlinear,
-               share)
-        if key in cache:
-            table[layer.id] = [replace(c, layer_id=layer.id)
-                               for c in cache[key]]
+        key = (_layer_signature(layer), platform, policy, share,
+               latency_model, max_mmu)
+        memo = _TABLE_MEMO if use_memo else local
+        hit = memo.get(key)
+        if hit is not None:
+            if use_memo:
+                _MEMO_STATS["table_hits"] += 1
+            table[layer.id] = [replace(c, layer_id=layer.id) for c in hit]
             continue
+        if use_memo:
+            _MEMO_STATS["table_misses"] += 1
         cands = enumerate_layer_candidates(layer, platform, policy,
                                            max_mmu=max_mmu,
                                            bandwidth_share=share,
@@ -845,7 +1224,10 @@ def build_candidate_table(graph: WorkloadGraph, platform: DoraPlatform,
         if not cands:
             raise ValueError(f"no feasible candidate for layer {layer.name} "
                              f"({layer.M}x{layer.K}x{layer.N}) on {platform.name}")
-        cache[key] = cands
+        if use_memo:
+            _memo_put(_TABLE_MEMO, _TABLE_MEMO_CAP, key, tuple(cands))
+        else:
+            local[key] = tuple(cands)
         table[layer.id] = cands
     return table
 

@@ -33,6 +33,25 @@ class ScheduleEntry:
     sfu_ids: tuple[int, ...]
 
 
+def dispatch_overlap_s(mode: CandidateMode,
+                       platform: DoraPlatform) -> float:
+    """How far a layer's slot may lap into its producers' slots.
+
+    Every emitted layer opens with dependency-free head instructions —
+    the LMU_CFG and the weight prefetch — and the simulator charges the
+    per-layer IDU dispatch cost (``platform.startup_s``) on that first
+    instruction, so for any layer that is not at the very front of the
+    machine the whole dispatch window runs hidden under its producers'
+    tails.  ``pipeline_layer_latency`` prices the layer from an idle
+    machine and therefore includes the dispatch at the head of its
+    latency; chaining such layers back-to-back without credit charges
+    the hidden window once per layer (the NCF-S under-unity ratio).
+    The analytic model keeps its regression-locked no-overlap timing."""
+    if mode.latency_model == "pipeline":
+        return platform.startup_s
+    return 0.0
+
+
 @dataclass
 class Schedule:
     entries: list[ScheduleEntry] = field(default_factory=list)
@@ -69,20 +88,23 @@ class Schedule:
                     or max(e.mmu_ids, default=-1) >= platform.n_mmu
                     or max(e.sfu_ids, default=-1) >= platform.n_sfu):
                 raise ValueError(f"layer {l.id}: unit id out of range")
+            lap = dispatch_overlap_s(e.mode, platform)
             for d in l.deps:
-                if e.start < by_layer[d].end - eps:
+                if e.start < by_layer[d].end - lap - eps:
                     raise ValueError(
                         f"precedence violated: layer {l.id} starts {e.start} "
-                        f"before dep {d} ends {by_layer[d].end}")
-        # unit exclusivity
+                        f"before dep {d} ends {by_layer[d].end} "
+                        f"(dispatch overlap {lap})")
+        # unit exclusivity: a later entry's slot may lap an earlier one
+        # by its own dispatch window (no unit is held while dispatching)
         for kind, count in (("lmu", platform.n_lmu), ("mmu", platform.n_mmu),
                             ("sfu", platform.n_sfu)):
             for uid in range(count):
-                ivs = sorted((e.start, e.end, e.layer_id)
+                ivs = sorted((e.start, e.end, e.layer_id, e.mode)
                              for e in self.entries
                              if uid in getattr(e, f"{kind}_ids"))
-                for (s1, e1, l1), (s2, e2, l2) in zip(ivs, ivs[1:]):
-                    if s2 < e1 - eps:
+                for (s1, e1, l1, _), (s2, e2, l2, m2) in zip(ivs, ivs[1:]):
+                    if s2 < e1 - dispatch_overlap_s(m2, platform) - eps:
                         raise ValueError(
                             f"{kind}{uid} overlap: layers {l1} and {l2}")
 
@@ -158,16 +180,23 @@ def list_schedule(graph: WorkloadGraph,
         mode = modes[mi % len(modes)] if mi is not None else \
             min(modes, key=lambda c: c.latency_s)
         dep_done = max((finish[d] for d in deps[lid]), default=0.0)
+        ov = dispatch_overlap_s(mode, platform) if deps[lid] else 0.0
+        if ov:
+            # pipeline-priced layers lap their dep-free dispatch/prefetch
+            # head into the producers' tails, as the simulator does; the
+            # dispatch window holds no LMU/MMU/SFU, so the units need to
+            # be free only from start + ov onward
+            dep_done = max(dep_done - ov, 0.0)
         dep_done = max(dep_done, release.get(lid, 0.0))
         # earliest time all unit classes have capacity
         t = dep_done
         for _ in range(64):   # fixed-point on unit availability
-            t1, lmu_ids = lmu.earliest(mode.n_lmu, t)
+            t1, lmu_ids = lmu.earliest(mode.n_lmu, t + ov)
             t2, mmu_ids = mmu.earliest(mode.n_mmu, t1)
             t3, sfu_ids = sfu.earliest(mode.n_sfu, t2)
-            if t3 == t:
+            if t3 - ov == t:
                 break
-            t = t3
+            t = t3 - ov
         end = t + mode.latency_s
         lmu.occupy(lmu_ids, end)
         mmu.occupy(mmu_ids, end)
@@ -277,8 +306,8 @@ def interleave_aware_bound(schedule: Schedule, graph: WorkloadGraph,
                                            policy, share)
             dur = dur + frac * max(scaled - dur, 0.0)
         durations[e.layer_id] = dur
-    finish, tenant_finish = _replay_inflated(entries, graph, tenant_of,
-                                             durations, release)
+    finish, tenant_finish = _replay_inflated(entries, graph, platform,
+                                             tenant_of, durations, release)
     return InterleaveBound(
         makespan_s=max(finish.values(), default=0.0),
         contiguous_makespan_s=schedule.makespan,
@@ -287,6 +316,7 @@ def interleave_aware_bound(schedule: Schedule, graph: WorkloadGraph,
 
 
 def _replay_inflated(entries: list[ScheduleEntry], graph: WorkloadGraph,
+                     platform: DoraPlatform,
                      tenant_of: dict[int, int],
                      durations: dict[int, float],
                      release: dict[int, float]
@@ -298,7 +328,9 @@ def _replay_inflated(entries: list[ScheduleEntry], graph: WorkloadGraph,
     gap the engine chose to leave — keeping every re-timed bound
     monotonically >= the contiguous bound (and monotone in the supplied
     durations, which is what makes the oversubscription bound >= the
-    interleave-aware one)."""
+    interleave-aware one).  Precedence grants the same dispatch-overlap
+    credit as ``list_schedule``, so at uninflated durations the replay
+    reproduces the engine's timing exactly."""
     unit_free: dict[tuple[str, int], float] = {}
     finish: dict[int, float] = {}
     tenant_finish: dict[int, float] = {}
@@ -306,11 +338,15 @@ def _replay_inflated(entries: list[ScheduleEntry], graph: WorkloadGraph,
     for e in entries:
         t0 = max((finish[d] for d in deps[e.layer_id]),
                  default=0.0)
+        ov = (dispatch_overlap_s(e.mode, platform)
+              if deps[e.layer_id] else 0.0)
+        if ov:
+            t0 = max(t0 - ov, 0.0)
         t0 = max(t0, release.get(e.layer_id, 0.0), e.start)
         for kind, ids in (("lmu", e.lmu_ids), ("mmu", e.mmu_ids),
                           ("sfu", e.sfu_ids)):
             for uid in ids:
-                t0 = max(t0, unit_free.get((kind, uid), 0.0))
+                t0 = max(t0, unit_free.get((kind, uid), 0.0) - ov)
         end = t0 + durations[e.layer_id]
         finish[e.layer_id] = end
         for kind, ids in (("lmu", e.lmu_ids), ("mmu", e.mmu_ids),
@@ -388,13 +424,13 @@ def oversubscription_aware_bound(schedule: Schedule, graph: WorkloadGraph,
         interleave_aware_bound(schedule, graph, platform, policy,
                                tenant_of, shares, release=release)
     layers = {l.id: l for l in graph.layers}
-    demand_cache: dict[int, float] = {}
 
     def _demand(e: ScheduleEntry) -> float:
-        if e.layer_id not in demand_cache:
-            demand_cache[e.layer_id] = mode_dram_demand(
-                layers[e.layer_id], e.mode, platform, policy)
-        return demand_cache[e.layer_id]
+        # mode_dram_demand is memoized process-wide (perf_model's
+        # _REPRICE_MEMO), so repeated windows — and repeated bound
+        # replays across compiles — hit the shared cache directly
+        return mode_dram_demand(layers[e.layer_id], e.mode, platform,
+                                policy)
 
     durations: dict[int, float] = {}
     for e in entries:
@@ -449,8 +485,8 @@ def oversubscription_aware_bound(schedule: Schedule, graph: WorkloadGraph,
                                            policy, share_w)
             inflated += frac * max(scaled - dur, 0.0)
         durations[e.layer_id] = inflated
-    finish, tenant_finish = _replay_inflated(entries, graph, tenant_of,
-                                             durations, release)
+    finish, tenant_finish = _replay_inflated(entries, graph, platform,
+                                             tenant_of, durations, release)
     return OversubscriptionBound(
         makespan_s=max(finish.values(), default=0.0),
         interleave_aware_makespan_s=ilv.makespan_s,

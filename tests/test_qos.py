@@ -201,10 +201,12 @@ def test_share_scaled_platform_validation_and_monotonicity():
 # ------------------------------------------------ interleave-aware bound
 
 def _contended_pair() -> MultiTenantWorkload:
-    # 256-wide layers leave MMUs for the co-tenant, so the joint list
-    # schedule genuinely overlaps the tenants (512-wide layers would
-    # claim the whole array and serialize them)
-    mt = MultiTenantWorkload("contend", interleave="rr")
+    # mmu_cap=3 leaves MMUs for the co-tenant so the joint list schedule
+    # genuinely overlaps the tenants; without the cap the corrected
+    # epilogue pricing picks 4-of-6-MMU modes for these 256-wide layers,
+    # which serializes the pair and leaves the aware bound nothing to
+    # inflate
+    mt = MultiTenantWorkload("contend", interleave="rr", mmu_cap=3)
     mt.add_tenant("m0", mlp_graph("m0", 256, [256, 256, 256]))
     mt.add_tenant("m1", mlp_graph("m1", 256, [256, 256, 256]))
     return mt
