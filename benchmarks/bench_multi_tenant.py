@@ -114,6 +114,21 @@ SCENARIOS = {
 QOS_SHARES = {"BERT-S": 0.5, "NCF-S": 0.3, "MLP-S": 0.2}
 
 
+def scenario_graphs(scenario: str) -> dict:
+    """Tenant graphs of one named scenario.  Unknown names raise a
+    ValueError listing the valid choices — the CLI's argparse
+    ``choices`` already guards the flag, this guards every programmatic
+    entry point (``run``/``vc_sweep``/``main(scenarios=...)``) that
+    used to die with a bare KeyError."""
+    try:
+        factory = SCENARIOS[scenario]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {scenario!r}; valid choices: "
+            f"{', '.join(sorted(SCENARIOS))}") from None
+    return factory()
+
+
 _SOLO_CACHE: dict[str, tuple[dict[str, float], dict[str, float]]] = {}
 _JOINT_CACHE: dict[tuple, tuple] = {}
 
@@ -127,7 +142,7 @@ def _joint_compile(scenario: str, priority: dict[str, float] | None = None,
            tuple(sorted((arrival_s or {}).items())))
     if key not in _JOINT_CACHE:
         mt = MultiTenantWorkload(scenario)
-        for name, g in SCENARIOS[scenario]().items():
+        for name, g in scenario_graphs(scenario).items():
             mt.add_tenant(name, g,
                           priority=(priority or {}).get(name, 1.0),
                           arrival_s=(arrival_s or {}).get(name, 0.0))
@@ -165,7 +180,7 @@ def _schedule_dram_bytes(res) -> float:
 def run(scenario: str, priority: dict[str, float] | None = None,
         arrival_s: dict[str, float] | None = None) -> dict:
     comp = DoraCompiler(PLAT, Policy.dora())
-    solo_sched, solo_sim = _solo_baseline(scenario, SCENARIOS[scenario]())
+    solo_sched, solo_sim = _solo_baseline(scenario, scenario_graphs(scenario))
     mt, res = _joint_compile(scenario, priority, arrival_s)
     rep = comp.simulate(res)
 
@@ -241,7 +256,7 @@ def stage1_cmp(scenario: str, vc: int = 2,
     only the candidate-table pricing differs.  Reports the simulated
     wfq makespan, the chosen modes' total DRAM traffic, and every
     analytic bound's gap to the simulator."""
-    graphs = SCENARIOS[scenario]()
+    graphs = scenario_graphs(scenario)
     out = {}
     for label, sa in (("full_bw", False), ("share_aware", True)):
         mt = MultiTenantWorkload(scenario, interleave="priority",
@@ -306,7 +321,7 @@ def stage1_speed(scenario: str) -> dict:
     ``memo_hit_frac`` confirms the warm pass served every layer from
     the memo."""
     mt = MultiTenantWorkload(scenario)
-    for name, g in SCENARIOS[scenario]().items():
+    for name, g in scenario_graphs(scenario).items():
         mt.add_tenant(name, g)
     graph = mt.merge().graph
 
@@ -354,7 +369,7 @@ def latency_model_cmp(scenario: str, vc: int = 2) -> dict:
     wfq arbitration at ``vc`` channels fed the compile's resolved
     shares, exactly like ``stage1_cmp``.  Stage 1 stays full-bandwidth
     here so only the pricing model varies."""
-    graphs = SCENARIOS[scenario]()
+    graphs = scenario_graphs(scenario)
     out = {}
     for model in LATENCY_MODELS:
         comp = DoraCompiler(PLAT, Policy.dora())
@@ -397,7 +412,7 @@ def qos_sweep(scenario: str = "small_trio",
     comparable across PRs — ``stage1_cmp`` reports the share-aware
     re-pricing side by side."""
     shares = dict(shares or QOS_SHARES)
-    graphs = SCENARIOS[scenario]()
+    graphs = scenario_graphs(scenario)
     mt = MultiTenantWorkload(scenario, interleave="priority",
                              bandwidth_shares=shares)
     for name, g in graphs.items():

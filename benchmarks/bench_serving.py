@@ -1,0 +1,225 @@
+"""Online serving benchmark: per-tenant latency tails and SLO-violation
+rates under a requests/s load sweep.
+
+Each scenario serves the paper's small diverse models as dynamic
+Poisson request streams through ``repro.core.serving``: bounded
+per-tenant queues (reject on overflow), two requests per tenant
+co-dispatched per round, wfq MIU arbitration at ``vc_count=2`` fed the
+scenario's explicit per-tenant ``bandwidth_shares`` — the QoS machinery
+defending *tail latency* now, not just joint makespan.  Every tenant's
+SLO is ``SLO_FACTOR`` x its solo compile+simulate makespan, so the
+violation rate reads as "how often did serving latency exceed 4x the
+unloaded service time".
+
+The sweep runs each scenario at ``--rps`` points (per-tenant requests/s,
+default 150/450/900: under-, near-, and over-saturation for these
+models on VCK190) with a fixed seed, so rows are bit-for-bit
+reproducible run-to-run.  Per (scenario, rps, tenant) it reports
+p50/p95/p99 end-to-end latency, the SLO-violation rate, reject counts,
+and queue-depth high-water marks; ``benchmarks/compare_bench.py`` gates
+CI on >10 % p99 or violation-rate regressions of these rows against the
+committed ``BENCH_multi_tenant.json``.
+
+``--json PATH`` merges the serving rows into an existing artifact under
+each scenario's ``serving`` key (or creates the file), so one artifact
+carries both the static co-scheduling rows and the serving sweep.
+
+Usage: PYTHONPATH=src python benchmarks/bench_serving.py
+       PYTHONPATH=src python benchmarks/bench_serving.py --rps 150,900
+       PYTHONPATH=src python benchmarks/bench_serving.py \
+           --scenario small_pair --json BENCH_multi_tenant.json
+   or: PYTHONPATH=src python -m benchmarks.run serving
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform, Policy,
+                        ServingConfig, ServingSimulator, TenantStream)
+from repro.configs import paper_models
+
+PLAT = DoraPlatform.vck190()
+
+# serving scenarios: tenant name -> (model, guaranteed DRAM share).
+# The small paper models keep the sweep offline-fast; their joint
+# rounds run in ~2 ms simulated time, so the default sweep spans
+# under- to over-saturation.
+SERVING_SCENARIOS = {
+    "small_pair": {
+        "BERT-S": 0.6,
+        "NCF-S": 0.4,
+    },
+    "small_trio": {
+        "BERT-S": 0.5,
+        "NCF-S": 0.3,
+        "MLP-S": 0.2,
+    },
+}
+
+RPS_SWEEP = (150, 450, 900)     # per-tenant requests/s
+SLO_FACTOR = 4.0                # SLO = factor x solo simulated makespan
+HORIZON_S = 0.12                # Poisson arrival window per sweep point
+SEED = 2026
+QUEUE_CAPACITY = 8
+MAX_BATCH = 2
+
+
+def scenario_streams(scenario: str) -> list[TenantStream]:
+    """Tenant streams of one named scenario (rps filled in per sweep
+    point); unknown names raise a ValueError listing the valid choices
+    instead of a bare KeyError."""
+    try:
+        spec = SERVING_SCENARIOS[scenario]
+    except KeyError:
+        raise ValueError(
+            f"unknown serving scenario {scenario!r}; valid choices: "
+            f"{', '.join(sorted(SERVING_SCENARIOS))}") from None
+    return [TenantStream(name, paper_models.get(name), rps=1.0,
+                         slo_s=SLO_FACTOR * _solo_makespan(name))
+            for name in spec]
+
+
+_SOLO_MS: dict[str, float] = {}
+
+
+def _solo_makespan(model: str) -> float:
+    """Solo compile+simulate makespan of one paper model (cached; the
+    basis every tenant's SLO is scaled from)."""
+    if model not in _SOLO_MS:
+        comp = DoraCompiler(PLAT, Policy.dora())
+        res = comp.compile(paper_models.get(model),
+                           CompileOptions(engine="list"))
+        _SOLO_MS[model] = comp.simulate(res).makespan_s
+    return _SOLO_MS[model]
+
+
+def sweep(scenario: str, rps_points: tuple[int, ...] = RPS_SWEEP,
+          seed: int = SEED) -> dict:
+    """One scenario's load sweep.  A single ``ServingSimulator``
+    carries the batch-shape compile+simulate cache across every sweep
+    point, so only the first point pays the compiles."""
+    streams = scenario_streams(scenario)
+    shares = dict(SERVING_SCENARIOS[scenario])
+    sim = ServingSimulator(PLAT, Policy.dora())
+    out: dict = {
+        "slo_s": {st.name: st.slo_s for st in streams},
+        "shares": shares,
+        "seed": seed,
+        "horizon_s": HORIZON_S,
+        "rps": {},
+    }
+    for rps in rps_points:
+        if rps <= 0:
+            raise ValueError(f"rps sweep points must be > 0, got {rps}")
+        point_streams = [TenantStream(st.name, st.graph, rps=float(rps),
+                                      slo_s=st.slo_s)
+                         for st in streams]
+        cfg = ServingConfig(
+            horizon_s=HORIZON_S, seed=seed,
+            queue_capacity=QUEUE_CAPACITY, admission="reject",
+            max_batch_per_tenant=MAX_BATCH,
+            vc_count=2, vc_arbitration="wfq", interleave="rr",
+            bandwidth_shares=shares)
+        res = sim.serve(point_streams, cfg)
+        row: dict = {
+            "end_s": res.end_s,
+            "rounds": len(res.rounds),
+            "cache_hits": res.compile_cache_hits,
+            "cache_misses": res.compile_cache_misses,
+            "tenants": {},
+        }
+        for name, s in res.stats.items():
+            row["tenants"][name] = {
+                "submitted": s.submitted,
+                "served": s.served,
+                "rejected": s.rejected,
+                "reject_rate": s.reject_rate,
+                "p50_s": s.p50_s,
+                "p95_s": s.p95_s,
+                "p99_s": s.p99_s,
+                "mean_latency_s": s.mean_latency_s,
+                "slo_violation_rate": s.slo_violation_rate,
+                "max_queue_depth": s.max_queue_depth,
+                "miu_wait_s": s.miu_wait_s,
+            }
+        out["rps"][str(rps)] = row
+    return out
+
+
+def emit_sweep(emit, scenario: str, sw: dict) -> None:
+    pre = f"serving.{scenario}"
+    for rps, row in sw["rps"].items():
+        for name, t in row["tenants"].items():
+            emit(f"{pre}.rps{rps}.{name}.p99_s", t["p99_s"],
+                 f"p50={t['p50_s']:.6g},p95={t['p95_s']:.6g},"
+                 f"served={t['served']},rejected={t['rejected']},"
+                 f"max_queue_depth={t['max_queue_depth']}")
+            emit(f"{pre}.rps{rps}.{name}.slo_violation_rate",
+                 t["slo_violation_rate"],
+                 f"slo_s={sw['slo_s'][name]:.6g},"
+                 f"share={sw['shares'][name]:.3g},"
+                 f"reject_rate={t['reject_rate']:.3g}")
+        emit(f"{pre}.rps{rps}.rounds", row["rounds"],
+             f"cache_hits={row['cache_hits']},"
+             f"cache_misses={row['cache_misses']},"
+             f"end_s={row['end_s']:.6g}")
+
+
+def main(emit, scenarios: tuple[str, ...] | None = None,
+         results: dict | None = None,
+         rps_points: tuple[int, ...] = RPS_SWEEP) -> dict:
+    """Full serving benchmark: every scenario's load sweep.  Results
+    nest under each scenario's ``serving`` key so they merge into the
+    BENCH_multi_tenant.json artifact next to the static rows."""
+    results = results if results is not None else {}
+    for scenario in scenarios or tuple(sorted(SERVING_SCENARIOS)):
+        sw = sweep(scenario, rps_points)
+        results.setdefault(scenario, {})["serving"] = sw
+        emit_sweep(emit, scenario, sw)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rps", metavar="N[,N...]", default=None,
+                    help="comma-separated per-tenant requests/s sweep "
+                         f"points (default: {','.join(map(str, RPS_SWEEP))})")
+    ap.add_argument("--scenario", choices=sorted(SERVING_SCENARIOS),
+                    default=None,
+                    help="restrict the sweep to one scenario "
+                         "(the CI smoke test runs small_pair)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="merge the serving rows into this JSON artifact "
+                         "under each scenario's 'serving' key (created "
+                         "if missing; the BENCH_multi_tenant.json "
+                         "perf trajectory)")
+    args = ap.parse_args()
+    try:
+        rps_points = (RPS_SWEEP if args.rps is None else
+                      tuple(int(p) for p in args.rps.split(",") if p))
+    except ValueError:
+        ap.error(f"--rps expects comma-separated integers, got {args.rps!r}")
+    if not rps_points:
+        ap.error("--rps needs at least one sweep point")
+    print("name,value,derived")
+
+    def _emit(name, value, derived=""):
+        if isinstance(value, float):
+            value = f"{value:.6g}"
+        print(f"{name},{value},{derived}")
+
+    results: dict = {}
+    if args.json and os.path.exists(args.json):
+        with open(args.json) as f:
+            results = json.load(f)
+    scenarios = (args.scenario,) if args.scenario else None
+    main(_emit, scenarios=scenarios, results=results, rps_points=rps_points)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")

@@ -24,6 +24,14 @@ below that floor — and ``stage1_speedup`` (scalar over vectorized
 stage 1) gates in the opposite direction: a drop beyond the time
 threshold fails.
 
+Online-serving rows (``bench_serving.py``, nested under each
+scenario's ``serving`` key) gate too: per-tenant ``p99_s`` tail
+latencies use the same relative threshold as makespans, and
+``slo_violation_rate`` gates on *absolute* delta (a rate that worsens
+by more than the threshold, e.g. 0.12 -> 0.25 at the default 10 %,
+fails) — relative gating is meaningless against a 0.0 baseline.
+p50/p95, reject counts, and queue depths are reported but not gated.
+
 Usage: PYTHONPATH=src python benchmarks/compare_bench.py fresh.json \
            [--baseline BENCH_multi_tenant.json] [--threshold 0.10] \
            [--time-threshold 0.25]
@@ -48,11 +56,18 @@ _TIME_KEYS = ("stage1_vectorized_s", "stage1_memo_warm_s")
 # higher-is-better DSE rows: a *drop* beyond --time-threshold fails
 _TIME_HIGHER_BETTER = ("stage1_speedup",)
 _TIME_FLOOR_S = 0.005
+# online-serving leaves (bench_serving.py): per-tenant p99 tail
+# latencies gate relatively like makespans; SLO-violation rates gate on
+# absolute delta (the baseline is often exactly 0.0)
+_SERVING_KEYS = ("p99_s",)
+_RATE_KEYS = ("slo_violation_rate",)
 
 
 def _is_gated(path: tuple[str, ...]) -> bool:
     key = path[-1]
     if len(path) >= 2 and path[-2] in _GATED_PARENTS:
+        return True
+    if key in _SERVING_KEYS:
         return True
     return key in _GATED_EXACT or any(key.endswith(s)
                                       for s in _GATED_SUFFIXES)
@@ -83,10 +98,23 @@ def compare(fresh: dict, baseline: dict, threshold: float,
     improvements: list[str] = []
     for path in sorted(set(f) & set(b)):
         base, new = b[path], f[path]
+        label = ".".join(path)
+        if path[-1] in _RATE_KEYS:
+            # rates gate on absolute delta — the baseline is often 0.0,
+            # where a relative threshold would either always or never fire
+            delta = new - base
+            if delta > threshold:
+                regressions.append(
+                    f"{label}: {base:.3g} -> {new:.3g} "
+                    f"(+{delta:.3g} violation rate)")
+            elif delta < -threshold:
+                improvements.append(
+                    f"{label}: {base:.3g} -> {new:.3g} "
+                    f"({delta:.3g} violation rate)")
+            continue
         if base <= 0.0:
             continue
         rel = new / base - 1.0
-        label = ".".join(path)
         if _is_gated(path):
             if rel > threshold:
                 regressions.append(
@@ -139,10 +167,10 @@ def main(argv: list[str] | None = None) -> int:
     regressions, improvements = compare(fresh, baseline, args.threshold,
                                         args.time_threshold)
     both = set(flatten(fresh)) & set(flatten(baseline))
-    n_gated = sum(1 for p in both if _is_gated(p))
+    n_gated = sum(1 for p in both if _is_gated(p) or p[-1] in _RATE_KEYS)
     n_time = sum(1 for p in both
                  if _is_time_gated(p) or p[-1] in _TIME_HIGHER_BETTER)
-    print(f"compared {n_gated} simulated-makespan rows "
+    print(f"compared {n_gated} simulated-makespan/serving rows "
           f"(threshold {args.threshold * 100:.0f}%) and {n_time} "
           f"DSE-time rows (threshold {args.time_threshold * 100:.0f}%)")
     for line in improvements:

@@ -6,6 +6,7 @@
   bench_dse       — Fig. 12 (DAG partitioning; GA vs MILP optimality)
   bench_kernels   — kernel micro-bench + TPU tile plans
   bench_multi_tenant — multi-DNN co-scheduling: joint vs sequential
+  bench_serving   — online serving: dynamic request streams, SLO tails
   roofline        — §Roofline table from the dry-run artifacts
 
 Prints ``name,value,derived`` CSV.
@@ -17,13 +18,15 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_dse, bench_e2e, bench_kernels,
-                            bench_multi_tenant, bench_single_pe, roofline)
+                            bench_multi_tenant, bench_serving,
+                            bench_single_pe, roofline)
     mods = {
         "single_pe": bench_single_pe,
         "e2e": bench_e2e,
         "dse": bench_dse,
         "kernels": bench_kernels,
         "multi_tenant": bench_multi_tenant,
+        "serving": bench_serving,
         "roofline": roofline,
     }
     want = sys.argv[1:] or list(mods)

@@ -315,7 +315,13 @@ class DoraCompiler:
         rt.load_inputs(inputs)
         return rt.execute(result.codegen.program)
 
-    def simulate(self, result: CompileResult) -> SimReport:
+    def simulate(self, result: CompileResult,
+                 platform: DoraPlatform | None = None) -> SimReport:
+        """Event-driven simulation of a compiled program.  ``platform``
+        overrides the compile-time platform for the *timing* run only —
+        the serving layer uses this to replay one compiled schedule on a
+        VC/wfq-enabled variant (``DoraPlatform.with_vc``) without
+        recompiling."""
         arrivals = None
         priorities = None
         if result.workload is not None:
@@ -323,6 +329,6 @@ class DoraCompiler:
                         for ti, t in enumerate(result.workload.tenants)}
             priorities = {ti: t.priority
                           for ti, t in enumerate(result.workload.tenants)}
-        return simulate(result.codegen, self.platform, arrivals=arrivals,
-                        priorities=priorities,
+        return simulate(result.codegen, platform or self.platform,
+                        arrivals=arrivals, priorities=priorities,
                         bandwidth_shares=result.bandwidth_shares or None)

@@ -1,0 +1,568 @@
+"""Online serving simulation: dynamic per-tenant request streams with
+SLOs, layered on the static compiler/simulator stack.
+
+Everything below the compiler schedules a *static*
+``MultiTenantWorkload`` known at compile time.  Production traffic is a
+stream of requests per tenant — each request an inference of that
+tenant's model — arriving over time with a latency SLO attached.  This
+module closes that gap with a deterministic event-loop simulator:
+
+  arrivals   ``RequestStream`` draws each tenant's arrival trace up
+             front: seeded Poisson (exponential inter-arrivals at
+             ``TenantStream.rps``) or trace-driven (explicit
+             ``TenantStream.trace`` timestamps).  The per-tenant RNG is
+             seeded from ``(seed, tenant name)`` via crc32, so the same
+             seed reproduces the same trace bit-for-bit, per tenant,
+             regardless of which other tenants are configured.
+  admission  Per-tenant FIFO queues, optionally bounded
+             (``queue_capacity``).  An arrival that finds its queue
+             full is handled by the ``admission`` policy: ``reject``
+             drops the new request, ``shed-oldest`` drops the oldest
+             *queued* request and admits the new one (both count as
+             rejected; a dispatched request is never shed).
+  dispatch   The machine serves *rounds*.  At each round start the
+             dispatcher pops up to ``max_batch_per_tenant`` requests
+             from every tenant's queue head (stream declaration order),
+             builds the joint ``MultiTenantWorkload`` of those model
+             instances (request k of tenant T becomes merged tenant
+             ``T#k``), compiles it, and simulates it on the configured
+             VC/QoS platform (``vc_count``/``vc_arbitration``, wfq fed
+             the per-tenant ``bandwidth_shares`` split across the
+             tenant's in-flight requests).  Batches repeat heavily in
+             steady state, so compile+simulate results are cached on
+             the batch *shape* (model multiset + knobs) — the stage-1
+             memo already makes the cold compiles cheap, and cache hits
+             make repeat rounds O(1).
+  clock      A request dispatched at round start ``t`` finishes at
+             ``t + finish_s`` of its merged-tenant slot in the round's
+             simulation; the next round starts when the whole joint
+             batch drains (``t + makespan_s``).  Arrivals during the
+             round queue up (or are rejected) at their own timestamps.
+             An idle machine fast-forwards to the next arrival.
+
+Per-tenant ``ServingStats`` extends the ``TenantSimStats`` accounting
+across rounds (``miu_wait_s``, ``miu_bytes`` accumulate over every
+round the tenant appeared in) with serving-level metrics: p50/p95/p99
+end-to-end latency (arrival -> finish, nearest-rank quantiles),
+SLO-violation rate among served requests (``latency_s > slo_s``),
+reject counts, and queue-depth high-water marks.
+
+Conservation invariant (checked by tests/test_serving.py): per tenant,
+``submitted == served + rejected + in_queue`` at the end of the run.
+With ``drain=True`` (default) the loop serves every queued request
+after the arrival horizon, so ``in_queue == 0``; with ``drain=False``
+the machine stops at the first round boundary past ``horizon_s`` and
+leftover requests stay queued.
+
+A single-request stream degenerates exactly to the static path: one
+round, one merged tenant, so its end-to-end latency equals the solo
+``compile`` + ``simulate`` makespan of that model (bit-for-bit under
+the default config).
+"""
+
+from __future__ import annotations
+
+import zlib
+from collections import deque
+from dataclasses import dataclass, field
+from random import Random
+
+from .compiler import ENGINES, CompileOptions, CompileResult, DoraCompiler
+from .graph import WorkloadGraph
+from .interleave import POLICIES as INTERLEAVE_POLICIES
+from .multi_tenant import QOS_POLICIES, TENANT_SEP, MultiTenantWorkload
+from .perf_model import LATENCY_MODELS, DoraPlatform, Policy
+from .simulator import SimReport, nearest_rank
+
+# admission-control policies for a full queue (docs-synced by
+# tests/test_docs.py): "reject" drops the arriving request,
+# "shed-oldest" drops the oldest queued request and admits the new one.
+ADMISSION_POLICIES = ("reject", "shed-oldest")
+
+# merged-tenant separator: request k of tenant T joins a batch as "T#k"
+SLOT_SEP = "#"
+
+
+@dataclass(frozen=True)
+class Request:
+    """One arrival: ``seq``-th request of ``tenant`` at ``arrival_s``."""
+
+    tenant: str
+    seq: int
+    arrival_s: float
+
+
+@dataclass(frozen=True)
+class TenantStream:
+    """One tenant's traffic contract: the model it runs, its arrival
+    process (exactly one of ``rps`` — Poisson rate in requests/s — or
+    ``trace`` — explicit ascending arrival timestamps), its latency SLO
+    and queueing limits.
+
+    ``priority`` feeds the merged workload exactly like
+    ``TenantSpec.priority`` (list-engine pick order, priority-
+    proportional share fallback).  ``slo_s`` is the end-to-end latency
+    target a served request is graded against (None = no SLO).
+    ``queue_capacity`` overrides ``ServingConfig.queue_capacity`` for
+    this tenant (None = use the config default)."""
+
+    name: str
+    graph: WorkloadGraph
+    rps: float | None = None
+    trace: tuple[float, ...] | None = None
+    priority: float = 1.0
+    slo_s: float | None = None
+    queue_capacity: int | None = None
+
+    def validate(self) -> None:
+        if not self.name:
+            raise ValueError("tenant stream needs a name")
+        for sep in (TENANT_SEP, SLOT_SEP):
+            if sep in self.name:
+                raise ValueError(
+                    f"tenant name {self.name!r} may not contain {sep!r} "
+                    "(reserved for merged-workload namespacing)")
+        if (self.rps is None) == (self.trace is None):
+            raise ValueError(f"tenant {self.name!r}: exactly one of rps "
+                             "(Poisson) or trace (explicit arrivals) "
+                             "must be set")
+        if self.rps is not None and self.rps <= 0:
+            raise ValueError(f"tenant {self.name!r}: rps must be > 0")
+        if self.trace is not None:
+            if any(t < 0 for t in self.trace):
+                raise ValueError(f"tenant {self.name!r}: trace arrivals "
+                                 "must be >= 0")
+            if list(self.trace) != sorted(self.trace):
+                raise ValueError(f"tenant {self.name!r}: trace must be "
+                                 "ascending")
+        if self.priority <= 0:
+            raise ValueError(f"tenant {self.name!r}: priority must be > 0")
+        if self.slo_s is not None and self.slo_s <= 0:
+            raise ValueError(f"tenant {self.name!r}: slo_s must be > 0")
+        if self.queue_capacity is not None and self.queue_capacity < 1:
+            raise ValueError(f"tenant {self.name!r}: queue_capacity "
+                             "must be >= 1")
+
+
+@dataclass
+class RequestStream:
+    """The merged, time-ordered arrival trace of every tenant.
+
+    Poisson tenants draw exponential inter-arrival gaps from a
+    ``Random(crc32(f"{seed}:{name}"))`` stream until ``horizon_s``;
+    trace tenants contribute their explicit timestamps verbatim (the
+    horizon only bounds generated arrivals).  Ties are broken by stream
+    declaration order then sequence number, so the merged order — and
+    therefore the whole serving run — is a pure function of
+    (streams, seed, horizon)."""
+
+    streams: list[TenantStream]
+    horizon_s: float
+    seed: int = 0
+
+    def generate(self) -> list[Request]:
+        order = {st.name: i for i, st in enumerate(self.streams)}
+        requests: list[Request] = []
+        for st in self.streams:
+            st.validate()
+            if st.trace is not None:
+                times = list(st.trace)
+            else:
+                rng = Random(zlib.crc32(f"{self.seed}:{st.name}".encode()))
+                times = []
+                t = 0.0
+                while True:
+                    t += rng.expovariate(st.rps)
+                    if t >= self.horizon_s:
+                        break
+                    times.append(t)
+            requests.extend(Request(st.name, k, tt)
+                            for k, tt in enumerate(times))
+        requests.sort(key=lambda r: (r.arrival_s, order[r.tenant], r.seq))
+        return requests
+
+
+@dataclass
+class ServingConfig:
+    """The serving knob surface, following the ``CompileOptions`` /
+    ``MultiTenantWorkload`` conventions: compile-side knobs (``engine``,
+    ``qos``, ``interleave``, ``latency_model``, ``share_aware_stage1``,
+    ``mmu_cap``) are forwarded verbatim — None defers exactly as it
+    does there (``qos`` resolves to "wfq" iff ``bandwidth_shares`` are
+    set) — while the serving-side knobs shape the event loop:
+
+      ``horizon_s``             Poisson arrivals are generated in
+                                [0, horizon); with ``drain=False`` the
+                                machine also stops dispatching at the
+                                first round boundary >= horizon.
+      ``seed``                  arrival-trace RNG seed (bit-for-bit
+                                reproducible runs).
+      ``queue_capacity``        default per-tenant queue bound (None =
+                                unbounded; ``TenantStream`` may
+                                override per tenant).
+      ``admission``             full-queue policy, one of
+                                ``ADMISSION_POLICIES``.
+      ``max_batch_per_tenant``  requests per tenant co-dispatched in
+                                one round (its share splits across
+                                them).
+      ``vc_count``/``vc_arbitration``  the simulation platform's MIU
+                                virtual-channel setup
+                                (``DoraPlatform.with_vc``); wfq is what
+                                makes ``bandwidth_shares`` defend tail
+                                latency.
+      ``bandwidth_shares``      tenant name -> guaranteed DRAM share
+                                (sum <= 1), split evenly across the
+                                tenant's in-flight requests each round.
+      ``drain``                 serve every queued request after the
+                                horizon (True) or stop at the horizon
+                                and report leftovers as ``in_queue``.
+    """
+
+    horizon_s: float = 1.0
+    seed: int = 0
+    queue_capacity: int | None = None
+    admission: str = "reject"
+    max_batch_per_tenant: int = 1
+    drain: bool = True
+    vc_count: int = 1
+    vc_arbitration: str = "fifo"
+    bandwidth_shares: dict[str, float] | None = None
+    engine: str = "list"
+    qos: str | None = None
+    interleave: str | None = None
+    latency_model: str | None = None
+    share_aware_stage1: bool | None = None
+    mmu_cap: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.horizon_s <= 0:
+            raise ValueError(f"horizon_s must be > 0, got {self.horizon_s}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {self.admission!r}; "
+                             f"expected one of {ADMISSION_POLICIES}")
+        if self.queue_capacity is not None and self.queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1, got "
+                             f"{self.queue_capacity}")
+        if self.max_batch_per_tenant < 1:
+            raise ValueError("max_batch_per_tenant must be >= 1, got "
+                             f"{self.max_batch_per_tenant}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"expected one of {ENGINES}")
+        if self.qos is not None and self.qos not in QOS_POLICIES:
+            raise ValueError(f"unknown qos policy {self.qos!r}; "
+                             f"expected one of {QOS_POLICIES}")
+        if (self.interleave is not None
+                and self.interleave not in INTERLEAVE_POLICIES):
+            raise ValueError(f"unknown interleave policy "
+                             f"{self.interleave!r}; expected one of "
+                             f"{INTERLEAVE_POLICIES}")
+        if (self.latency_model is not None
+                and self.latency_model not in LATENCY_MODELS):
+            raise ValueError(f"unknown latency_model "
+                             f"{self.latency_model!r}; expected one of "
+                             f"{LATENCY_MODELS}")
+        # vc_count / vc_arbitration are validated by DoraPlatform.with_vc
+        # at serve time (the platform owns those invariants)
+
+
+@dataclass
+class RequestRecord:
+    """Lifecycle of one request through the event loop."""
+
+    tenant: str
+    seq: int
+    arrival_s: float
+    status: str = "queued"        # queued | served | rejected
+    dispatch_s: float = -1.0      # round start that served it
+    finish_s: float = -1.0        # absolute completion time
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end latency (queue wait + service); -1 until served."""
+        if self.status != "served":
+            return -1.0
+        return self.finish_s - self.arrival_s
+
+
+@dataclass(frozen=True)
+class DispatchRound:
+    """One batch the machine served: start time, joint makespan, the
+    (tenant, seq) requests in merged-slot order, and whether the
+    compile+simulate came from the batch-shape cache."""
+
+    start_s: float
+    makespan_s: float
+    requests: tuple[tuple[str, int], ...]
+    cache_hit: bool
+
+
+@dataclass
+class ServingStats:
+    """Per-tenant serving report: conservation counters, end-to-end
+    latency quantiles, SLO grading, and the ``TenantSimStats``
+    accounting accumulated across every round the tenant appeared in."""
+
+    tenant: str
+    slo_s: float | None = None
+    queue_capacity: int | None = None
+    submitted: int = 0
+    served: int = 0
+    rejected: int = 0
+    in_queue: int = 0
+    max_queue_depth: int = 0
+    latencies_s: list[float] = field(default_factory=list)
+    # TenantSimStats accounting, summed over rounds:
+    miu_wait_s: float = 0.0
+    miu_bytes: float = 0.0
+    busy_s: float = 0.0           # sum of per-round service makespans
+
+    def _q(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return nearest_rank(sorted(self.latencies_s), q)
+
+    @property
+    def p50_s(self) -> float:
+        return self._q(0.50)
+
+    @property
+    def p95_s(self) -> float:
+        return self._q(0.95)
+
+    @property
+    def p99_s(self) -> float:
+        return self._q(0.99)
+
+    @property
+    def mean_latency_s(self) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return sum(self.latencies_s) / len(self.latencies_s)
+
+    @property
+    def slo_violations(self) -> int:
+        """Served requests whose end-to-end latency exceeded the SLO
+        (rejected requests are reported separately, not graded)."""
+        if self.slo_s is None:
+            return 0
+        return sum(1 for lt in self.latencies_s if lt > self.slo_s)
+
+    @property
+    def slo_violation_rate(self) -> float:
+        if not self.served:
+            return 0.0
+        return self.slo_violations / self.served
+
+    @property
+    def reject_rate(self) -> float:
+        if not self.submitted:
+            return 0.0
+        return self.rejected / self.submitted
+
+
+@dataclass
+class ServingResult:
+    """One serving run: per-tenant stats, the full request log, the
+    dispatch rounds, and the batch-cache hit counters."""
+
+    stats: dict[str, ServingStats]
+    requests: list[RequestRecord]
+    rounds: list[DispatchRound]
+    arrivals: list[Request]
+    end_s: float                  # time the machine went idle / stopped
+    compile_cache_hits: int = 0
+    compile_cache_misses: int = 0
+
+    @property
+    def total_served(self) -> int:
+        return sum(s.served for s in self.stats.values())
+
+    @property
+    def total_rejected(self) -> int:
+        return sum(s.rejected for s in self.stats.values())
+
+
+class ServingSimulator:
+    """The event loop.  One instance may run many ``serve()`` sweeps —
+    the batch-shape compile+simulate cache persists across calls (keys
+    include every knob that affects the compiled round), which is what
+    makes an rps sweep over the same scenario nearly free after the
+    first point."""
+
+    def __init__(self, platform: DoraPlatform | None = None,
+                 policy: Policy | None = None):
+        self.platform = platform or DoraPlatform.vck190()
+        self.policy = policy or Policy.dora()
+        self._compiler = DoraCompiler(self.platform, self.policy)
+        self._cache: dict[tuple, tuple[CompileResult, SimReport]] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # ------------------------------------------------------------- dispatch
+    def _round_key(self, batch: list[tuple[TenantStream, int]],
+                   config: ServingConfig) -> tuple:
+        shares = (tuple(sorted(config.bandwidth_shares.items()))
+                  if config.bandwidth_shares else None)
+        return (tuple((st.name, n) for st, n in batch),
+                config.engine, config.qos, config.interleave,
+                config.latency_model, config.share_aware_stage1,
+                config.mmu_cap, config.max_batch_per_tenant, shares,
+                config.vc_count, config.vc_arbitration)
+
+    def _serve_batch(self, batch: list[tuple[TenantStream, int]],
+                     config: ServingConfig
+                     ) -> tuple[CompileResult, SimReport, bool]:
+        """Compile + simulate one dispatch round.  Request k of tenant T
+        becomes merged tenant ``T#k`` (all released at round start, so
+        the compiled schedule and its simulation are reusable verbatim
+        whenever the same batch shape recurs)."""
+        key = self._round_key(batch, config)
+        hit = key in self._cache
+        if hit:
+            self.cache_hits += 1
+            res, rep = self._cache[key]
+            return res, rep, True
+        self.cache_misses += 1
+        mt = MultiTenantWorkload(
+            "serving_batch", mmu_cap=config.mmu_cap,
+            interleave=config.interleave or "none")
+        shares: dict[str, float] = {}
+        for st, n in batch:
+            for k in range(n):
+                slot = f"{st.name}{SLOT_SEP}{k}"
+                mt.add_tenant(slot, st.graph, priority=st.priority)
+                if config.bandwidth_shares and st.name in \
+                        config.bandwidth_shares:
+                    # the tenant's guarantee splits across its in-flight
+                    # requests: k concurrent instances each defend 1/k
+                    shares[slot] = config.bandwidth_shares[st.name] / n
+        if shares:
+            mt.bandwidth_shares = shares
+        res = self._compiler.compile(mt, CompileOptions(
+            engine=config.engine, qos=config.qos,
+            latency_model=config.latency_model,
+            share_aware_stage1=config.share_aware_stage1))
+        plat = self.platform.with_vc(config.vc_count, config.vc_arbitration)
+        rep = self._compiler.simulate(res, platform=plat)
+        self._cache[key] = (res, rep)
+        return res, rep, False
+
+    # ------------------------------------------------------------ the loop
+    def serve(self, streams: list[TenantStream],
+              config: ServingConfig | None = None) -> ServingResult:
+        config = config or ServingConfig()
+        if not streams:
+            raise ValueError("serve() needs at least one TenantStream")
+        names = [st.name for st in streams]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant stream names in {names}")
+        for st in streams:
+            st.validate()
+        if config.bandwidth_shares:
+            unknown = set(config.bandwidth_shares) - set(names)
+            if unknown:
+                raise ValueError(f"bandwidth_shares name unknown tenants "
+                                 f"{sorted(unknown)}")
+            for n, s in config.bandwidth_shares.items():
+                if s <= 0:
+                    raise ValueError(f"tenant {n!r} bandwidth share must "
+                                     f"be > 0, got {s}")
+            if sum(config.bandwidth_shares.values()) > 1.0 + 1e-9:
+                raise ValueError("bandwidth shares sum to "
+                                 f"{sum(config.bandwidth_shares.values()):.6g}"
+                                 " > 1")
+        # validate the simulation platform knobs up front (fail fast)
+        self.platform.with_vc(config.vc_count, config.vc_arbitration)
+
+        arrivals = RequestStream(list(streams), config.horizon_s,
+                                 config.seed).generate()
+        stats = {st.name: ServingStats(
+            tenant=st.name, slo_s=st.slo_s,
+            queue_capacity=(st.queue_capacity
+                            if st.queue_capacity is not None
+                            else config.queue_capacity))
+            for st in streams}
+        queues: dict[str, deque[RequestRecord]] = {n: deque() for n in names}
+        records: list[RequestRecord] = []
+        rounds: list[DispatchRound] = []
+        hits0, misses0 = self.cache_hits, self.cache_misses
+
+        def admit(req: Request) -> None:
+            s = stats[req.tenant]
+            q = queues[req.tenant]
+            rec = RequestRecord(req.tenant, req.seq, req.arrival_s)
+            records.append(rec)
+            s.submitted += 1
+            if s.queue_capacity is not None and len(q) >= s.queue_capacity:
+                if config.admission == "reject":
+                    rec.status = "rejected"
+                    s.rejected += 1
+                    return
+                # shed-oldest: the stale head of the queue makes room
+                old = q.popleft()
+                old.status = "rejected"
+                s.rejected += 1
+            q.append(rec)
+            s.max_queue_depth = max(s.max_queue_depth, len(q))
+
+        t = 0.0
+        ai = 0
+        n_arrivals = len(arrivals)
+        while True:
+            while ai < n_arrivals and arrivals[ai].arrival_s <= t:
+                admit(arrivals[ai])
+                ai += 1
+            if not config.drain and t >= config.horizon_s:
+                break
+            if all(not q for q in queues.values()):
+                if ai >= n_arrivals:
+                    break
+                # idle machine: fast-forward to the next arrival
+                t = arrivals[ai].arrival_s
+                continue
+            batch = [(st, min(len(queues[st.name]),
+                              config.max_batch_per_tenant))
+                     for st in streams if queues[st.name]]
+            res, rep, hit = self._serve_batch(batch, config)
+            served: list[tuple[str, int]] = []
+            slot = 0
+            for st, n in batch:
+                s = stats[st.name]
+                for _ in range(n):
+                    rec = queues[st.name].popleft()
+                    tstat = rep.tenant_stats[slot]
+                    rec.status = "served"
+                    rec.dispatch_s = t
+                    rec.finish_s = t + tstat.finish_s
+                    s.served += 1
+                    s.latencies_s.append(rec.finish_s - rec.arrival_s)
+                    s.miu_wait_s += tstat.miu_wait_s
+                    s.miu_bytes += tstat.miu_bytes
+                    served.append((rec.tenant, rec.seq))
+                    slot += 1
+                s.busy_s += rep.makespan_s
+            rounds.append(DispatchRound(t, rep.makespan_s, tuple(served),
+                                        hit))
+            t += rep.makespan_s
+        # wind-down: arrivals after the stop point still pass admission
+        # (the queue no longer drains), keeping the conservation
+        # invariant exact for drain=False runs
+        while ai < n_arrivals:
+            admit(arrivals[ai])
+            ai += 1
+        for name_, q in queues.items():
+            stats[name_].in_queue = len(q)
+        return ServingResult(
+            stats=stats, requests=records, rounds=rounds,
+            arrivals=arrivals, end_s=t,
+            compile_cache_hits=self.cache_hits - hits0,
+            compile_cache_misses=self.cache_misses - misses0)
+
+
+def serve(streams: list[TenantStream],
+          config: ServingConfig | None = None,
+          platform: DoraPlatform | None = None,
+          policy: Policy | None = None) -> ServingResult:
+    """One-shot convenience wrapper around ``ServingSimulator.serve``."""
+    return ServingSimulator(platform, policy).serve(streams, config)

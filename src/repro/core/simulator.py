@@ -77,6 +77,19 @@ from .perf_model import DoraPlatform
 _MIU_OPS = (OpType.MIU_LOAD, OpType.MIU_STORE)
 
 
+def nearest_rank(sorted_vals, q: float) -> float:
+    """Deterministic nearest-rank quantile of an ascending-sorted sample
+    — the idiom behind ``TenantSimStats.tail_latency_s`` (p95) and the
+    serving layer's per-tenant p50/p95/p99 latency reporting.  Monotone
+    in ``q`` by construction (so p50 <= p95 <= p99 always holds)."""
+    if not sorted_vals:
+        raise ValueError("nearest_rank of an empty sample")
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    n = len(sorted_vals)
+    return sorted_vals[min(n - 1, int(q * (n - 1) + 0.5))]
+
+
 @dataclass
 class TenantSimStats:
     """Per-tenant timing extracted from one multi-tenant simulation."""
@@ -601,10 +614,7 @@ def _tenant_stats(result: CodegenResult, end: list[float],
         done = sorted(layer_ready[lid] - arr
                       for lid, owner in result.tenant_of.items()
                       if owner == ti and lid in layer_ready)
-        if done:
-            tail = done[min(len(done) - 1, int(0.95 * (len(done) - 1) + 0.5))]
-        else:
-            tail = finish - arr
+        tail = nearest_rank(done, 0.95) if done else finish - arr
         stats[ti] = TenantSimStats(
             tenant=ti, arrival_s=arr, finish_s=finish,
             makespan_s=finish - arr, tail_latency_s=tail,

@@ -31,6 +31,9 @@ from repro.core.multi_tenant import QOS_POLICIES, MultiTenantWorkload
 from repro.core.perf_model import (LATENCY_MODELS, VC_ARBITRATIONS,
                                    CandidateMode, DoraPlatform, Policy,
                                    TilePlan)
+from repro.core import serving as serving_mod
+from repro.core.serving import (ADMISSION_POLICIES, RequestRecord,
+                                ServingConfig, ServingStats, TenantStream)
 from repro.core.simulator import TenantSimStats
 
 pytestmark = pytest.mark.docs
@@ -41,6 +44,7 @@ ISA_MD = DOCS / "ISA.md"
 ARCH_MD = DOCS / "ARCHITECTURE.md"
 SCHED_MD = DOCS / "SCHEDULING.md"
 PERF_MD = DOCS / "PERF_MODEL.md"
+SERVING_MD = DOCS / "SERVING.md"
 CORE = REPO / "src" / "repro" / "core"
 
 
@@ -294,6 +298,80 @@ def test_bench_artifact_has_latency_model_rows():
     assert qwen["pipeline"]["solo"]["qwen3-4b"]["sim_to_sched_ratio"] <= 1.15
 
 
+# --------------------------------------------------- SERVING.md sync checks
+
+@pytest.fixture(scope="module")
+def serving_tokens() -> set[str]:
+    assert SERVING_MD.is_file(), "docs/SERVING.md is missing"
+    return _code_spans(SERVING_MD.read_text())
+
+
+def test_serving_md_documents_every_config_knob(serving_tokens):
+    fields = {f.name for f in dataclasses.fields(ServingConfig)}
+    missing = fields - serving_tokens
+    assert not missing, (f"ServingConfig knobs missing from "
+                         f"docs/SERVING.md: {missing}")
+
+
+def test_serving_md_documents_every_stream_field(serving_tokens):
+    fields = {f.name for f in dataclasses.fields(TenantStream)}
+    missing = fields - serving_tokens
+    assert not missing, (f"TenantStream fields missing from "
+                         f"docs/SERVING.md: {missing}")
+
+
+def test_serving_md_documents_every_admission_policy():
+    # raw-text containment, not _code_spans: "shed-oldest" has a hyphen
+    # so the single-token span regex can't see it
+    text = SERVING_MD.read_text()
+    missing = [p for p in ADMISSION_POLICIES if f"`{p}`" not in text]
+    assert not missing, (f"admission policies missing from "
+                         f"docs/SERVING.md: {missing}")
+
+
+def test_serving_md_documents_the_stats_surface(serving_tokens):
+    """Every conservation counter, quantile, and rate the stats report
+    must be named — plus the request-lifecycle fields the walkthrough
+    leans on."""
+    stat_fields = {f.name for f in dataclasses.fields(ServingStats)}
+    rec_fields = {f.name for f in dataclasses.fields(RequestRecord)
+                  if f.name.endswith("_s")}
+    props = {"p50_s", "p95_s", "p99_s", "slo_violations",
+             "slo_violation_rate", "reject_rate", "mean_latency_s"}
+    missing = (stat_fields | rec_fields | props) - serving_tokens
+    assert not missing, (f"ServingStats/RequestRecord names missing "
+                         f"from docs/SERVING.md: {missing}")
+
+
+def test_serving_md_names_only_real_symbols(serving_tokens):
+    """Ghost-symbol check: every serving-flavored token the doc
+    backticks must exist in the serving module (or be a field of one of
+    its dataclasses) — catches renames and deletions."""
+    names: set[str] = set(dir(serving_mod)) | set(dir(core_pkg))
+    for cls in (ServingConfig, TenantStream, ServingStats, RequestRecord):
+        names |= {f.name for f in dataclasses.fields(cls)}
+    symbol_like = {
+        t for t in serving_tokens
+        if t.startswith(("Serving", "Request", "Tenant", "Dispatch"))
+        or t in {"serve", "ADMISSION_POLICIES", "SERVING_SCENARIOS",
+                 "SLO_FACTOR", "sweep", "scenario_streams"}}
+    # bench symbols live in bench_serving.py, not the core module
+    bench_src = (REPO / "benchmarks" / "bench_serving.py").read_text()
+    ghosts = {t for t in symbol_like - names
+              if not re.search(rf"\b{re.escape(t)}\b", bench_src)}
+    assert not ghosts, (f"docs/SERVING.md names nonexistent "
+                        f"symbols: {ghosts}")
+
+
+def test_architecture_md_mentions_serving_layer():
+    text = ARCH_MD.read_text()
+    for needle in ("serving.py", "SERVING.md", "TenantStream",
+                   "bench_serving.py"):
+        assert needle in text, (
+            f"docs/ARCHITECTURE.md lost its serving-layer {needle!r} "
+            "reference")
+
+
 # ------------------------------------------- file:line pointer accuracy
 
 _PTR_ADJACENT = re.compile(
@@ -314,7 +392,7 @@ def _resolve_doc_path(path: str) -> Path | None:
 
 
 @pytest.mark.parametrize("doc", ["ARCHITECTURE.md", "SCHEDULING.md",
-                                 "PERF_MODEL.md", "ISA.md"])
+                                 "PERF_MODEL.md", "ISA.md", "SERVING.md"])
 def test_doc_file_line_pointers_resolve(doc):
     """Every `file.py:line` pointer must name an existing file and an
     in-range line; when a backticked symbol directly precedes the
@@ -368,6 +446,68 @@ def test_bench_multi_tenant_help_matches_documented_flags():
             assert flag in proc.stdout, (
                 f"{page.name} documents nonexistent benchmark "
                 f"flag {flag}")
+
+
+def _run_bench(name: str, *argv: str) -> subprocess.CompletedProcess:
+    bench = REPO / "benchmarks" / name
+    return subprocess.run(
+        [sys.executable, str(bench), *argv], capture_output=True,
+        text=True, timeout=120,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+
+
+def _load_bench(name: str):
+    """Import a benchmarks/ module by file path (the directory is a
+    namespace package, so tests load it explicitly)."""
+    import importlib.util
+
+    path = REPO / "benchmarks" / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(f"_docs_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_serving_help_matches_documented_flags():
+    """bench_serving.py --help exits 0 and lists every flag its
+    docstring and docs/SERVING.md mention."""
+    proc = _run_bench("bench_serving.py", "--help")
+    assert proc.returncode == 0, proc.stderr
+    source = (REPO / "benchmarks" / "bench_serving.py").read_text()
+    doc_flags = set(re.findall(r"(--[a-z][a-z-]*)",
+                               source.split('"""')[1]))
+    assert doc_flags, "bench_serving docstring lost its usage examples"
+    for flag in doc_flags | {"--rps", "--scenario", "--json"}:
+        assert flag in proc.stdout, (
+            f"{flag} documented but absent from --help")
+    for flag in re.findall(r"`(--[a-z][a-z-]*)`", SERVING_MD.read_text()):
+        assert flag in proc.stdout, (
+            f"SERVING.md documents nonexistent serving-bench flag {flag}")
+
+
+@pytest.mark.parametrize("bench", ["bench_multi_tenant.py",
+                                   "bench_serving.py"])
+def test_bench_cli_rejects_unknown_scenario(bench):
+    """--scenario is argparse-choices guarded: a bogus name exits
+    nonzero with the valid choices in stderr, not a KeyError
+    traceback."""
+    proc = _run_bench(bench, "--scenario", "bogus_scenario")
+    assert proc.returncode != 0
+    assert "invalid choice" in proc.stderr
+    assert "bogus_scenario" in proc.stderr
+    assert "Traceback" not in proc.stderr
+
+
+def test_programmatic_unknown_scenario_raises_value_error():
+    """The programmatic entry points (everything that bypasses
+    argparse) raise a ValueError naming the valid choices instead of
+    dying with a bare KeyError."""
+    mt = _load_bench("bench_multi_tenant")
+    with pytest.raises(ValueError, match="valid choices.*small_pair"):
+        mt.scenario_graphs("bogus")
+    srv = _load_bench("bench_serving")
+    with pytest.raises(ValueError, match="valid choices.*small_pair"):
+        srv.scenario_streams("bogus")
 
 
 # ----------------------------------------------- bench perf artifact sync

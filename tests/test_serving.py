@@ -1,0 +1,329 @@
+"""Serving-layer test suite: determinism, conservation invariants,
+admission-control properties (via the optional-hypothesis shim), and
+the wfq-vs-fifo tail-latency guarantee.
+
+The property tests share one module-level ``ServingSimulator`` so the
+batch-shape compile+simulate cache carries across examples — every
+distinct batch shape compiles once for the whole module."""
+
+from __future__ import annotations
+
+import pytest
+from _hyp_compat import given, settings, strategies as st
+
+from repro.core import (ADMISSION_POLICIES, CompileOptions, DoraCompiler,
+                        DoraPlatform, Policy, RequestStream, ServingConfig,
+                        ServingSimulator, TenantStream, mlp_graph,
+                        nearest_rank, serve)
+from repro.configs import paper_models
+
+PLAT = DoraPlatform.vck190()
+
+# two tiny distinct models keep every event-loop test offline-fast
+TINY_A = mlp_graph("tiny_a", 16, [64, 64, 64])
+TINY_B = mlp_graph("tiny_b", 32, [128, 64])
+
+# one simulator for the whole module: batch shapes recur across tests
+# and property examples, so compiles amortize to near-zero
+SIM = ServingSimulator(PLAT, Policy.dora())
+
+
+def _streams(rps_a=2000.0, rps_b=2000.0, **kw):
+    return [TenantStream("a", TINY_A, rps=rps_a, **kw),
+            TenantStream("b", TINY_B, rps=rps_b, **kw)]
+
+
+def _assert_conservation(res):
+    for s in res.stats.values():
+        assert s.submitted == s.served + s.rejected + s.in_queue, (
+            f"{s.tenant}: {s.submitted} != {s.served} + {s.rejected} "
+            f"+ {s.in_queue}")
+
+
+# ------------------------------------------------------------ determinism
+
+def test_same_seed_bit_identical_trace_and_dispatch():
+    cfg = ServingConfig(horizon_s=0.005, seed=11, queue_capacity=4)
+    r1 = SIM.serve(_streams(), cfg)
+    r2 = ServingSimulator(PLAT, Policy.dora()).serve(_streams(), cfg)
+    assert r1.arrivals == r2.arrivals
+    assert [rd.requests for rd in r1.rounds] == \
+        [rd.requests for rd in r2.rounds]
+    assert [rd.start_s for rd in r1.rounds] == \
+        [rd.start_s for rd in r2.rounds]
+    for name in ("a", "b"):
+        assert r1.stats[name].latencies_s == r2.stats[name].latencies_s
+
+
+def test_different_seed_different_trace():
+    s1 = RequestStream(_streams(), horizon_s=0.005, seed=1).generate()
+    s2 = RequestStream(_streams(), horizon_s=0.005, seed=2).generate()
+    assert [r.arrival_s for r in s1] != [r.arrival_s for r in s2]
+
+
+def test_trace_generation_per_tenant_independent():
+    """A tenant's Poisson trace depends only on (seed, its name) — adding
+    another tenant must not perturb it."""
+    solo = RequestStream([TenantStream("a", TINY_A, rps=2000.0)],
+                         horizon_s=0.005, seed=5).generate()
+    pair = RequestStream(_streams(), horizon_s=0.005, seed=5).generate()
+    assert [r.arrival_s for r in solo] == \
+        [r.arrival_s for r in pair if r.tenant == "a"]
+
+
+# --------------------------------------------------- conservation + tails
+
+def test_conservation_at_drain():
+    res = SIM.serve(_streams(), ServingConfig(horizon_s=0.01, seed=3,
+                                              queue_capacity=3))
+    _assert_conservation(res)
+    for s in res.stats.values():
+        assert s.in_queue == 0          # drain=True serves everything
+
+
+def test_conservation_without_drain():
+    res = SIM.serve(_streams(), ServingConfig(horizon_s=0.002, seed=3,
+                                              queue_capacity=3,
+                                              drain=False))
+    _assert_conservation(res)
+
+
+def test_percentiles_ordered():
+    res = SIM.serve(_streams(), ServingConfig(horizon_s=0.01, seed=7))
+    for s in res.stats.values():
+        assert s.served > 0
+        assert s.p50_s <= s.p95_s <= s.p99_s
+        assert s.p99_s <= max(s.latencies_s)
+
+
+def test_nearest_rank_monotone_and_bounds():
+    vals = [1.0, 2.0, 5.0, 9.0, 100.0]
+    qs = [0.0, 0.25, 0.5, 0.75, 0.95, 0.99, 1.0]
+    picked = [nearest_rank(vals, q) for q in qs]
+    assert picked == sorted(picked)
+    assert picked[0] == 1.0 and picked[-1] == 100.0
+    with pytest.raises(ValueError):
+        nearest_rank([], 0.5)
+    with pytest.raises(ValueError):
+        nearest_rank(vals, 1.5)
+
+
+# ----------------------------------------- static-path equivalence (solo)
+
+def test_single_request_latency_equals_solo_makespan():
+    """A one-request stream degenerates to the static path: end-to-end
+    latency == the solo compile+simulate makespan, bit-for-bit."""
+    for graph in (TINY_A, paper_models.get("MLP-S")):
+        comp = DoraCompiler(PLAT, Policy.dora())
+        solo = comp.simulate(
+            comp.compile(graph, CompileOptions(engine="list"))).makespan_s
+        res = serve([TenantStream("t", graph, trace=(0.0,))],
+                    ServingConfig(horizon_s=1.0), platform=PLAT)
+        assert res.stats["t"].served == 1
+        assert res.stats["t"].latencies_s[0] == solo
+
+
+def test_back_to_back_trace_serializes():
+    """Two requests arriving at once serve in two rounds (batch cap 1):
+    the second's latency is ~2x the first's."""
+    res = serve([TenantStream("t", TINY_A, trace=(0.0, 0.0))],
+                ServingConfig(horizon_s=1.0, max_batch_per_tenant=1))
+    lat = res.stats["t"].latencies_s
+    assert len(res.rounds) == 2
+    assert lat[1] == pytest.approx(2 * lat[0])
+
+
+# ------------------------------------------------------- admission control
+
+def test_reject_policy_drops_newest():
+    # capacity 1, three simultaneous arrivals: one queued, two rejected
+    res = serve([TenantStream("t", TINY_A, trace=(0.0, 0.0, 0.0),
+                              queue_capacity=1)],
+                ServingConfig(horizon_s=1.0))
+    s = res.stats["t"]
+    assert (s.submitted, s.served, s.rejected) == (3, 1, 2)
+    served = [r for r in res.requests if r.status == "served"]
+    assert [r.seq for r in served] == [0]       # oldest survived
+
+
+def test_shed_oldest_policy_keeps_newest():
+    res = serve([TenantStream("t", TINY_A, trace=(0.0, 0.0, 0.0),
+                              queue_capacity=1)],
+                ServingConfig(horizon_s=1.0, admission="shed-oldest"))
+    s = res.stats["t"]
+    assert (s.submitted, s.served, s.rejected) == (3, 1, 2)
+    served = [r for r in res.requests if r.status == "served"]
+    assert [r.seq for r in served] == [2]       # newest survived
+
+
+def test_tenant_capacity_overrides_config_default():
+    res = serve([TenantStream("t", TINY_A, trace=(0.0,) * 4,
+                              queue_capacity=3)],
+                ServingConfig(horizon_s=1.0, queue_capacity=1))
+    assert res.stats["t"].rejected == 1         # 3 queued, not 1
+
+
+# ------------------------------------------------------ validation errors
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="admission"):
+        ServingConfig(admission="drop-all")
+    with pytest.raises(ValueError, match="engine"):
+        ServingConfig(engine="quantum")
+    with pytest.raises(ValueError, match="exactly one"):
+        TenantStream("t", TINY_A).validate()
+    with pytest.raises(ValueError, match="exactly one"):
+        TenantStream("t", TINY_A, rps=1.0, trace=(0.0,)).validate()
+    with pytest.raises(ValueError, match="ascending"):
+        TenantStream("t", TINY_A, trace=(1.0, 0.5)).validate()
+    with pytest.raises(ValueError, match="reserved"):
+        TenantStream("a#0", TINY_A, rps=1.0).validate()
+    with pytest.raises(ValueError, match="unknown tenants"):
+        SIM.serve([TenantStream("a", TINY_A, rps=1.0)],
+                  ServingConfig(bandwidth_shares={"ghost": 0.5}))
+    with pytest.raises(ValueError, match="duplicate"):
+        SIM.serve([TenantStream("a", TINY_A, rps=1.0),
+                   TenantStream("a", TINY_B, rps=1.0)], ServingConfig())
+    with pytest.raises(ValueError, match="at least one"):
+        SIM.serve([], ServingConfig())
+
+
+# ---------------------------------------------------------- cache behavior
+
+def test_batch_cache_hits_on_repeat_shapes():
+    sim = ServingSimulator(PLAT, Policy.dora())
+    res = sim.serve([TenantStream("t", TINY_A, trace=(0.0, 0.0, 0.0))],
+                    ServingConfig(horizon_s=1.0))
+    # three identical single-request rounds: 1 miss, 2 hits
+    assert res.compile_cache_misses == 1
+    assert res.compile_cache_hits == 2
+    assert [rd.cache_hit for rd in res.rounds] == [False, True, True]
+
+
+# ------------------------------------------- hypothesis property suite
+
+def _run_trace(trace_a, trace_b, capacity, admission, max_batch):
+    streams = [TenantStream("a", TINY_A, trace=tuple(trace_a)),
+               TenantStream("b", TINY_B, trace=tuple(trace_b))]
+    cfg = ServingConfig(horizon_s=0.001, queue_capacity=capacity,
+                        admission=admission,
+                        max_batch_per_tenant=max_batch)
+    return SIM.serve(streams, cfg)
+
+
+# arrival times on the tiny models' round timescale (rounds ~20-50us):
+# integer microseconds in [0, 300us], sorted into an ascending trace
+_trace = st.lists(st.integers(min_value=0, max_value=300),
+                  min_size=0, max_size=12).map(
+    lambda us: tuple(sorted(t * 1e-6 for t in us)))
+_capacity = st.integers(min_value=1, max_value=3)
+_admission = st.sampled_from(ADMISSION_POLICIES)
+_max_batch = st.integers(min_value=1, max_value=2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace_a=_trace, trace_b=_trace, capacity=_capacity,
+       admission=_admission, max_batch=_max_batch)
+def test_property_queue_bound_and_conservation(trace_a, trace_b, capacity,
+                                               admission, max_batch):
+    """Across randomized arrival traces: no tenant's queue ever exceeds
+    the configured capacity, conservation holds, and every served
+    request was dispatched at-or-after its arrival and finished after
+    its dispatch."""
+    res = _run_trace(trace_a, trace_b, capacity, admission, max_batch)
+    _assert_conservation(res)
+    for s in res.stats.values():
+        assert s.max_queue_depth <= capacity
+    for rec in res.requests:
+        if rec.status == "served":
+            assert rec.dispatch_s >= rec.arrival_s
+            assert rec.finish_s > rec.dispatch_s
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace_a=_trace, trace_b=_trace, capacity=_capacity,
+       admission=_admission, max_batch=_max_batch)
+def test_property_rejects_only_when_full(trace_a, trace_b, capacity,
+                                         admission, max_batch):
+    """A reject implies the tenant's queue actually reached capacity —
+    and an unbounded queue never rejects anything."""
+    res = _run_trace(trace_a, trace_b, capacity, admission, max_batch)
+    for s in res.stats.values():
+        if s.rejected:
+            assert s.max_queue_depth == capacity
+    unbounded = SIM.serve(
+        [TenantStream("a", TINY_A, trace=tuple(trace_a)),
+         TenantStream("b", TINY_B, trace=tuple(trace_b))],
+        ServingConfig(horizon_s=0.001, admission=admission,
+                      max_batch_per_tenant=max_batch))
+    for s in unbounded.stats.values():
+        assert s.rejected == 0
+        assert s.in_queue == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace_a=_trace, max_batch=_max_batch)
+def test_property_fifo_service_order_per_tenant(trace_a, max_batch):
+    """Within a tenant, requests are served in arrival (seq) order and
+    finish times are non-decreasing round-to-round."""
+    res = SIM.serve([TenantStream("a", TINY_A, trace=tuple(trace_a))],
+                    ServingConfig(horizon_s=0.001,
+                                  max_batch_per_tenant=max_batch))
+    served = [r for r in res.requests if r.status == "served"]
+    seqs = [r.seq for r in served]
+    assert seqs == sorted(seqs)
+    dispatches = [r.dispatch_s for r in served]
+    assert dispatches == sorted(dispatches)
+
+
+# ----------------------------------- wfq defends tail latency (regression)
+
+def test_wfq_beats_fifo_protected_p99():
+    """The QoS machinery's first tail-latency guarantee: under an
+    overload sweep, a wfq-protected tenant (80 % DRAM share, vc=2,
+    rr-interleaved program) beats the fifo/vc=1 baseline's p99 by a
+    locked margin.  Measured at this seed: ~1.52x (other seeds 1.5-1.8x);
+    the lock is 1.3x."""
+    mlp = paper_models.get("MLP-S")
+    bert = paper_models.get("BERT-S")
+
+    def run(**kw):
+        streams = [TenantStream("protected", mlp, rps=150, slo_s=0.004),
+                   TenantStream("bully", bert, rps=1200,
+                                queue_capacity=6)]
+        cfg = ServingConfig(horizon_s=0.25, seed=3, queue_capacity=6,
+                            max_batch_per_tenant=2, **kw)
+        return ServingSimulator(PLAT, Policy.dora()).serve(streams, cfg)
+
+    fifo = run()
+    wfq = run(vc_count=2, vc_arbitration="wfq", interleave="rr",
+              bandwidth_shares={"protected": 0.8, "bully": 0.2})
+    # both configs served the same requests (admission is load-driven,
+    # not policy-driven here)
+    assert fifo.stats["protected"].served == wfq.stats["protected"].served
+    p99_fifo = fifo.stats["protected"].p99_s
+    p99_wfq = wfq.stats["protected"].p99_s
+    assert p99_fifo >= 1.3 * p99_wfq, (
+        f"wfq tail protection regressed: fifo p99={p99_fifo:.6g} vs "
+        f"wfq p99={p99_wfq:.6g} (ratio {p99_fifo / p99_wfq:.3f} < 1.3)")
+    # and the protection is not bought by starving the bully: wfq's
+    # faster rounds serve at least as many of its requests as fifo did
+    assert wfq.stats["bully"].served >= fifo.stats["bully"].served
+
+
+def test_shares_shift_in_round_finish_order():
+    """Within one co-dispatched round, the share-protected tenant's
+    request finishes earlier under wfq than the same request does under
+    fifo arbitration."""
+    streams = [TenantStream("p", paper_models.get("MLP-S"), trace=(0.0,)),
+               TenantStream("q", paper_models.get("BERT-S"), trace=(0.0,))]
+
+    def first_finish(**kw):
+        res = ServingSimulator(PLAT, Policy.dora()).serve(
+            streams, ServingConfig(horizon_s=0.01, **kw))
+        return res.stats["p"].latencies_s[0]
+
+    fifo = first_finish()
+    wfq = first_finish(vc_count=2, vc_arbitration="wfq", interleave="rr",
+                       bandwidth_shares={"p": 0.8, "q": 0.2})
+    assert wfq < fifo
