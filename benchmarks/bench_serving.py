@@ -20,9 +20,17 @@ and queue-depth high-water marks; ``benchmarks/compare_bench.py`` gates
 CI on >10 % p99 or violation-rate regressions of these rows against the
 committed ``BENCH_multi_tenant.json``.
 
+The sweep runs under both dispatch modes by default: ``rounds``
+(round-synchronous co-dispatch, the PR-7 baseline) and ``preemptive``
+(instruction-level dynamic dispatch, where newly admitted requests
+join the inflight instruction frontier mid-flight).  ``--dispatch``
+restricts to one mode; the CI determinism check runs the preemptive
+sweep twice and requires byte-identical JSON.
+
 ``--json PATH`` merges the serving rows into an existing artifact under
-each scenario's ``serving`` key (or creates the file), so one artifact
-carries both the static co-scheduling rows and the serving sweep.
+each scenario's ``serving`` (rounds) and ``serving_preemptive`` keys
+(or creates the file), so one artifact carries the static
+co-scheduling rows and both serving sweeps.
 
 Usage: PYTHONPATH=src python benchmarks/bench_serving.py
        PYTHONPATH=src python benchmarks/bench_serving.py --rps 150,900
@@ -95,11 +103,18 @@ def _solo_makespan(model: str) -> float:
     return _SOLO_MS[model]
 
 
+DISPATCH_CHOICES = ("rounds", "preemptive", "both")
+
+
 def sweep(scenario: str, rps_points: tuple[int, ...] = RPS_SWEEP,
-          seed: int = SEED) -> dict:
-    """One scenario's load sweep.  A single ``ServingSimulator``
-    carries the batch-shape compile+simulate cache across every sweep
-    point, so only the first point pays the compiles."""
+          seed: int = SEED, dispatch: str = "rounds") -> dict:
+    """One scenario's load sweep under the given dispatch mode.  A
+    single ``ServingSimulator`` carries the batch-shape (rounds) and
+    solo-program (preemptive) compile caches across every sweep point,
+    so only the first point pays the compiles."""
+    if dispatch not in ("rounds", "preemptive"):
+        raise ValueError(f"sweep dispatch must be 'rounds' or "
+                         f"'preemptive', got {dispatch!r}")
     streams = scenario_streams(scenario)
     shares = dict(SERVING_SCENARIOS[scenario])
     sim = ServingSimulator(PLAT, Policy.dora())
@@ -108,6 +123,7 @@ def sweep(scenario: str, rps_points: tuple[int, ...] = RPS_SWEEP,
         "shares": shares,
         "seed": seed,
         "horizon_s": HORIZON_S,
+        "dispatch": dispatch,
         "rps": {},
     }
     for rps in rps_points:
@@ -119,7 +135,7 @@ def sweep(scenario: str, rps_points: tuple[int, ...] = RPS_SWEEP,
         cfg = ServingConfig(
             horizon_s=HORIZON_S, seed=seed,
             queue_capacity=QUEUE_CAPACITY, admission="reject",
-            max_batch_per_tenant=MAX_BATCH,
+            max_batch_per_tenant=MAX_BATCH, dispatch=dispatch,
             vc_count=2, vc_arbitration="wfq", interleave="rr",
             bandwidth_shares=shares)
         res = sim.serve(point_streams, cfg)
@@ -148,12 +164,20 @@ def sweep(scenario: str, rps_points: tuple[int, ...] = RPS_SWEEP,
     return out
 
 
+def _fmt(v: float | None) -> str:
+    """Format a latency quantile that is ``None`` when a tenant served
+    zero requests at a sweep point."""
+    return "na" if v is None else f"{v:.6g}"
+
+
 def emit_sweep(emit, scenario: str, sw: dict) -> None:
-    pre = f"serving.{scenario}"
+    key = ("serving" if sw.get("dispatch", "rounds") == "rounds"
+           else "serving_preemptive")
+    pre = f"{key}.{scenario}"
     for rps, row in sw["rps"].items():
         for name, t in row["tenants"].items():
             emit(f"{pre}.rps{rps}.{name}.p99_s", t["p99_s"],
-                 f"p50={t['p50_s']:.6g},p95={t['p95_s']:.6g},"
+                 f"p50={_fmt(t['p50_s'])},p95={_fmt(t['p95_s'])},"
                  f"served={t['served']},rejected={t['rejected']},"
                  f"max_queue_depth={t['max_queue_depth']}")
             emit(f"{pre}.rps{rps}.{name}.slo_violation_rate",
@@ -169,15 +193,26 @@ def emit_sweep(emit, scenario: str, sw: dict) -> None:
 
 def main(emit, scenarios: tuple[str, ...] | None = None,
          results: dict | None = None,
-         rps_points: tuple[int, ...] = RPS_SWEEP) -> dict:
-    """Full serving benchmark: every scenario's load sweep.  Results
-    nest under each scenario's ``serving`` key so they merge into the
-    BENCH_multi_tenant.json artifact next to the static rows."""
+         rps_points: tuple[int, ...] = RPS_SWEEP,
+         dispatch: str = "both") -> dict:
+    """Full serving benchmark: every scenario's load sweep under the
+    requested dispatch mode(s).  Rounds rows nest under each scenario's
+    ``serving`` key and preemptive rows under ``serving_preemptive``,
+    so both merge into the BENCH_multi_tenant.json artifact next to
+    the static rows (and both get picked up by the compare_bench CI
+    gate)."""
+    if dispatch not in DISPATCH_CHOICES:
+        raise ValueError(f"dispatch must be one of {DISPATCH_CHOICES}, "
+                         f"got {dispatch!r}")
     results = results if results is not None else {}
+    modes = (("rounds", "preemptive") if dispatch == "both"
+             else (dispatch,))
     for scenario in scenarios or tuple(sorted(SERVING_SCENARIOS)):
-        sw = sweep(scenario, rps_points)
-        results.setdefault(scenario, {})["serving"] = sw
-        emit_sweep(emit, scenario, sw)
+        for mode in modes:
+            sw = sweep(scenario, rps_points, dispatch=mode)
+            key = "serving" if mode == "rounds" else "serving_preemptive"
+            results.setdefault(scenario, {})[key] = sw
+            emit_sweep(emit, scenario, sw)
     return results
 
 
@@ -192,6 +227,11 @@ if __name__ == "__main__":
                     default=None,
                     help="restrict the sweep to one scenario "
                          "(the CI smoke test runs small_pair)")
+    ap.add_argument("--dispatch", choices=DISPATCH_CHOICES, default="both",
+                    help="serving dispatch mode(s) to sweep: round-"
+                         "synchronous, instruction-level preemptive, or "
+                         "both (default: both; the CI determinism check "
+                         "runs two preemptive-only invocations)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="merge the serving rows into this JSON artifact "
                          "under each scenario's 'serving' key (created "
@@ -217,7 +257,8 @@ if __name__ == "__main__":
         with open(args.json) as f:
             results = json.load(f)
     scenarios = (args.scenario,) if args.scenario else None
-    main(_emit, scenarios=scenarios, results=results, rps_points=rps_points)
+    main(_emit, scenarios=scenarios, results=results, rps_points=rps_points,
+         dispatch=args.dispatch)
 
     if args.json:
         with open(args.json, "w") as f:

@@ -25,12 +25,18 @@ stage 1) gates in the opposite direction: a drop beyond the time
 threshold fails.
 
 Online-serving rows (``bench_serving.py``, nested under each
-scenario's ``serving`` key) gate too: per-tenant ``p99_s`` tail
-latencies use the same relative threshold as makespans, and
-``slo_violation_rate`` gates on *absolute* delta (a rate that worsens
-by more than the threshold, e.g. 0.12 -> 0.25 at the default 10 %,
-fails) — relative gating is meaningless against a 0.0 baseline.
-p50/p95, reject counts, and queue depths are reported but not gated.
+scenario's ``serving`` key for round-synchronous dispatch and
+``serving_preemptive`` for the instruction-level dispatcher — gating
+matches on the leaf key, so both modes gate identically) gate too:
+per-tenant ``p99_s`` tail latencies use the same relative threshold as
+makespans, and ``slo_violation_rate`` gates on *absolute* delta (a
+rate that worsens by more than the threshold, e.g. 0.12 -> 0.25 at the
+default 10 %, fails) — relative gating is meaningless against a 0.0
+baseline.  p50/p95, reject counts, and queue depths are reported but
+not gated; a ``null`` quantile (tenant served zero requests at a sweep
+point) is skipped by ``flatten`` and never compared.  The
+``engine_race`` rows (``sched_s``, ``simulated_s``, ``wall_s``,
+ratios) are diagnostics, deliberately outside every gated key set.
 
 Usage: PYTHONPATH=src python benchmarks/compare_bench.py fresh.json \
            [--baseline BENCH_multi_tenant.json] [--threshold 0.10] \

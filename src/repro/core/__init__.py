@@ -28,10 +28,12 @@ from .schedule import (InterleaveBound, OversubscriptionBound, Schedule,
                        ScheduleEntry, dispatch_overlap_s,
                        interleave_aware_bound, list_schedule,
                        oversubscription_aware_bound, sequential_schedule)
-from .serving import (ADMISSION_POLICIES, DispatchRound, Request,
+from .serving import (ADMISSION_POLICIES, DISPATCH_MODES, DispatchEvent,
+                      DispatchRound, DynamicDispatcher, Request,
                       RequestRecord, RequestStream, ServingConfig,
                       ServingResult, ServingSimulator, ServingStats,
                       TenantStream, serve)
-from .simulator import SimReport, TenantSimStats, nearest_rank, simulate
+from .simulator import (IncrementalSimulator, SimReport, TenantSimStats,
+                        nearest_rank, simulate)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

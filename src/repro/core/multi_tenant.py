@@ -165,19 +165,50 @@ class MultiTenantWorkload:
                 shares[ti] = rest * self.tenants[ti].priority / psum
         return shares
 
-    def merge(self) -> MergedWorkload:
+    def merge(self, extend_from: MergedWorkload | None = None
+              ) -> MergedWorkload:
+        """Build the joint scheduling problem.
+
+        ``extend_from`` is the incremental-merge surface for the online
+        dispatcher: a ``MergedWorkload`` previously produced by this
+        method for a *prefix* of the current tenant list.  The already-
+        merged tenants' namespaced layers/inputs/releases are reused
+        verbatim (never re-validated, never re-copied) and only the
+        newly appended tenants merge on top.  ``extend_from`` is not
+        mutated — the returned workload owns fresh containers — and the
+        result is bit-identical to a from-scratch ``merge()`` (a
+        property test pins this)."""
         if not self.tenants:
             raise ValueError(f"{self.name}: no tenants to merge")
         if self.interleave not in INTERLEAVE_POLICIES:
             raise ValueError(f"{self.name}: unknown interleave policy "
                              f"{self.interleave!r}")
-        joint = WorkloadGraph(self.name)
-        tenant_of: dict[int, int] = {}
-        release: dict[int, float] = {}
-        priorities: dict[int, float] = {}
-        layer_map: dict[tuple[int, int], int] = {}
-        offset = 0
+        skip = 0
+        if extend_from is not None:
+            prev = extend_from
+            skip = 1 + max(prev.tenant_of.values(), default=-1)
+            if skip > len(self.tenants):
+                raise ValueError(
+                    f"{self.name}: extend_from merged {skip} tenants but "
+                    f"only {len(self.tenants)} are declared")
+            joint = WorkloadGraph(self.name)
+            joint.inputs = dict(prev.graph.inputs)
+            joint.layers = list(prev.graph.layers)
+            tenant_of = dict(prev.tenant_of)
+            release = dict(prev.release)
+            priorities = dict(prev.priorities)
+            layer_map = dict(prev.layer_map)
+            offset = len(prev.graph.layers)
+        else:
+            joint = WorkloadGraph(self.name)
+            tenant_of = {}
+            release = {}
+            priorities = {}
+            layer_map = {}
+            offset = 0
         for ti, t in enumerate(self.tenants):
+            if ti < skip:
+                continue
             t.graph.validate()
             ns = t.graph.namespaced_copy(t.name, TENANT_SEP)
             for iname, shape in ns.inputs.items():

@@ -15,7 +15,7 @@ exclusivity *across* tenants falls out of the shared unit pools.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from .graph import WorkloadGraph
 from .perf_model import (CandidateMode, DoraPlatform, Policy,
@@ -62,6 +62,18 @@ class Schedule:
 
     def by_layer(self) -> dict[int, ScheduleEntry]:
         return {e.layer_id: e for e in self.entries}
+
+    def shifted(self, dt: float) -> Schedule:
+        """A copy with every entry translated ``dt`` seconds later —
+        the incremental-replay surface: a request's solo schedule,
+        compiled once at t=0 and cached by batch shape, re-anchors at
+        its absolute dispatch time without recompiling.  Unit
+        assignments, modes, and durations are untouched, so a shifted
+        schedule validates against the same graph with every release
+        time shifted by the same ``dt``."""
+        return Schedule(entries=[
+            replace(e, start=e.start + dt, end=e.end + dt)
+            for e in self.entries])
 
     def validate(self, graph: WorkloadGraph, platform: DoraPlatform,
                  eps: float = 1e-9,

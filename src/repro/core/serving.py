@@ -65,6 +65,7 @@ from __future__ import annotations
 import zlib
 from collections import deque
 from dataclasses import dataclass, field
+from heapq import heappop, heappush
 from random import Random
 
 from .compiler import ENGINES, CompileOptions, CompileResult, DoraCompiler
@@ -72,12 +73,19 @@ from .graph import WorkloadGraph
 from .interleave import POLICIES as INTERLEAVE_POLICIES
 from .multi_tenant import QOS_POLICIES, TENANT_SEP, MultiTenantWorkload
 from .perf_model import LATENCY_MODELS, DoraPlatform, Policy
-from .simulator import SimReport, nearest_rank
+from .simulator import IncrementalSimulator, SimReport, nearest_rank
 
 # admission-control policies for a full queue (docs-synced by
 # tests/test_docs.py): "reject" drops the arriving request,
 # "shed-oldest" drops the oldest queued request and admits the new one.
 ADMISSION_POLICIES = ("reject", "shed-oldest")
+
+# dispatch modes (docs-synced by tests/test_docs.py): "rounds" is the
+# synchronous round loop (regression-locked PR 7 behaviour, bit for
+# bit); "preemptive" is the instruction-level dynamic dispatcher — new
+# arrivals join the machine mid-flight at instruction boundaries
+# instead of waiting for a round barrier.
+DISPATCH_MODES = ("rounds", "preemptive")
 
 # merged-tenant separator: request k of tenant T joins a batch as "T#k"
 SLOT_SEP = "#"
@@ -216,6 +224,16 @@ class ServingConfig:
       ``drain``                 serve every queued request after the
                                 horizon (True) or stop at the horizon
                                 and report leftovers as ``in_queue``.
+      ``dispatch``              one of ``DISPATCH_MODES``: "rounds"
+                                (synchronous round barriers, the
+                                regression-locked default) or
+                                "preemptive" (instruction-level
+                                dynamic dispatch via
+                                ``DynamicDispatcher``).  In preemptive
+                                mode ``max_batch_per_tenant`` bounds a
+                                tenant's *concurrent in-flight*
+                                requests instead of its per-round
+                                batch.
     """
 
     horizon_s: float = 1.0
@@ -224,6 +242,7 @@ class ServingConfig:
     admission: str = "reject"
     max_batch_per_tenant: int = 1
     drain: bool = True
+    dispatch: str = "rounds"
     vc_count: int = 1
     vc_arbitration: str = "fifo"
     bandwidth_shares: dict[str, float] | None = None
@@ -240,6 +259,9 @@ class ServingConfig:
         if self.admission not in ADMISSION_POLICIES:
             raise ValueError(f"unknown admission policy {self.admission!r}; "
                              f"expected one of {ADMISSION_POLICIES}")
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(f"unknown dispatch mode {self.dispatch!r}; "
+                             f"expected one of {DISPATCH_MODES}")
         if self.queue_capacity is not None and self.queue_capacity < 1:
             raise ValueError("queue_capacity must be >= 1, got "
                              f"{self.queue_capacity}")
@@ -317,21 +339,21 @@ class ServingStats:
     miu_bytes: float = 0.0
     busy_s: float = 0.0           # sum of per-round service makespans
 
-    def _q(self, q: float) -> float:
-        if not self.latencies_s:
-            return 0.0
+    def _q(self, q: float) -> float | None:
+        """Nearest-rank latency quantile; ``None`` when the tenant
+        served zero requests (no data is not a 0.0-latency tail)."""
         return nearest_rank(sorted(self.latencies_s), q)
 
     @property
-    def p50_s(self) -> float:
+    def p50_s(self) -> float | None:
         return self._q(0.50)
 
     @property
-    def p95_s(self) -> float:
+    def p95_s(self) -> float | None:
         return self._q(0.95)
 
     @property
-    def p99_s(self) -> float:
+    def p99_s(self) -> float | None:
         return self._q(0.99)
 
     @property
@@ -361,10 +383,46 @@ class ServingStats:
         return self.rejected / self.submitted
 
 
+@dataclass(frozen=True)
+class DispatchEvent:
+    """One state transition of the preemptive dispatcher, with a
+    snapshot of the request state machine *after* the transition.
+
+    ``kind`` is one of ``arrive`` (admitted to its tenant queue),
+    ``reject`` (dropped — the newcomer under "reject", the shed queue
+    head under "shed-oldest"), ``dispatch`` (popped from its queue,
+    compiled program admitted to the incremental simulator), or
+    ``complete`` (every instruction committed; request served).
+
+    ``queued``/``inflight`` list (tenant, seq) pairs in queue/admission
+    order; ``executed``/``rejected`` are running counts.  At every
+    event, admitted = queued + inflight + executed — the partition
+    invariant the property suite checks.  The instruction-level "ready"
+    set is transient (the simulator drains ready instructions up to the
+    event time before the event is processed), so it never appears in
+    a snapshot."""
+
+    time_s: float
+    kind: str
+    tenant: str
+    seq: int
+    queued: tuple[tuple[str, int], ...]
+    inflight: tuple[tuple[str, int], ...]
+    executed: int
+    rejected: int
+
+
 @dataclass
 class ServingResult:
     """One serving run: per-tenant stats, the full request log, the
-    dispatch rounds, and the batch-cache hit counters."""
+    dispatch rounds, and the batch-cache hit counters.
+
+    Under ``dispatch="preemptive"`` the result additionally carries the
+    dispatcher's event log (``events``) and the ``DynamicDispatcher``
+    itself (``dispatcher`` — its ``sim.log`` holds the per-instruction
+    commit trace for the property suite); ``rounds`` then holds one
+    single-request entry per served request in completion order, with
+    ``makespan_s`` the request's service time."""
 
     stats: dict[str, ServingStats]
     requests: list[RequestRecord]
@@ -373,6 +431,9 @@ class ServingResult:
     end_s: float                  # time the machine went idle / stopped
     compile_cache_hits: int = 0
     compile_cache_misses: int = 0
+    dispatch: str = "rounds"
+    events: list[DispatchEvent] = field(default_factory=list)
+    dispatcher: "DynamicDispatcher | None" = None
 
     @property
     def total_served(self) -> int:
@@ -396,6 +457,7 @@ class ServingSimulator:
         self.policy = policy or Policy.dora()
         self._compiler = DoraCompiler(self.platform, self.policy)
         self._cache: dict[tuple, tuple[CompileResult, SimReport]] = {}
+        self._solo_cache: dict[tuple, CompileResult] = {}
         self.cache_hits = 0
         self.cache_misses = 0
 
@@ -448,10 +510,47 @@ class ServingSimulator:
         self._cache[key] = (res, rep)
         return res, rep, False
 
-    # ------------------------------------------------------------ the loop
-    def serve(self, streams: list[TenantStream],
-              config: ServingConfig | None = None) -> ServingResult:
-        config = config or ServingConfig()
+    def _compile_solo(self, st: TenantStream, config: ServingConfig
+                      ) -> tuple[CompileResult, bool]:
+        """Compile one tenant's model as a single-tenant workload — the
+        unit of work the preemptive dispatcher admits per request.
+
+        Unlike a round compile, the tenant's explicit bandwidth share
+        (when set) prices the *whole* guarantee: the incremental
+        simulator arbitrates the tenant's concurrent requests on one
+        virtual channel, so the per-request split the round path does
+        (share/n) happens at simulation time, not compile time.  Keyed
+        in ``_solo_cache`` by every knob that affects the compiled
+        program; the cache persists across ``serve()`` calls exactly
+        like the batch-shape cache."""
+        share = (config.bandwidth_shares.get(st.name)
+                 if config.bandwidth_shares else None)
+        key = (st.name, config.engine, config.qos, config.interleave,
+               config.latency_model, config.share_aware_stage1,
+               config.mmu_cap, share)
+        if key in self._solo_cache:
+            self.cache_hits += 1
+            return self._solo_cache[key], True
+        self.cache_misses += 1
+        mt = MultiTenantWorkload(
+            "serving_solo", mmu_cap=config.mmu_cap,
+            interleave=config.interleave or "none")
+        mt.add_tenant(st.name, st.graph, priority=st.priority)
+        if share is not None:
+            mt.bandwidth_shares = {st.name: share}
+        res = self._compiler.compile(mt, CompileOptions(
+            engine=config.engine, qos=config.qos,
+            latency_model=config.latency_model,
+            share_aware_stage1=config.share_aware_stage1))
+        self._solo_cache[key] = res
+        return res, False
+
+    # --------------------------------------------------------- validation
+    @staticmethod
+    def _validate_serve(streams: list[TenantStream],
+                        config: ServingConfig) -> list[str]:
+        """Shared up-front validation of both dispatch paths; returns
+        the tenant name list."""
         if not streams:
             raise ValueError("serve() needs at least one TenantStream")
         names = [st.name for st in streams]
@@ -472,8 +571,17 @@ class ServingSimulator:
                 raise ValueError("bandwidth shares sum to "
                                  f"{sum(config.bandwidth_shares.values()):.6g}"
                                  " > 1")
+        return names
+
+    # ------------------------------------------------------------ the loop
+    def serve(self, streams: list[TenantStream],
+              config: ServingConfig | None = None) -> ServingResult:
+        config = config or ServingConfig()
+        names = self._validate_serve(streams, config)
         # validate the simulation platform knobs up front (fail fast)
         self.platform.with_vc(config.vc_count, config.vc_arbitration)
+        if config.dispatch == "preemptive":
+            return DynamicDispatcher(self, list(streams), config).run()
 
         arrivals = RequestStream(list(streams), config.horizon_s,
                                  config.seed).generate()
@@ -558,6 +666,224 @@ class ServingSimulator:
             arrivals=arrivals, end_s=t,
             compile_cache_hits=self.cache_hits - hits0,
             compile_cache_misses=self.cache_misses - misses0)
+
+
+def _resolve_stream_shares(streams: list[TenantStream],
+                           config: ServingConfig) -> dict[str, float]:
+    """Tenant name -> resolved DRAM share, mirroring
+    ``MultiTenantWorkload.resolve_bandwidth_shares``: explicit
+    ``config.bandwidth_shares`` win, unlisted tenants split the
+    leftover headroom priority-proportionally; without explicit shares
+    every tenant's share is its priority over the priority sum.  The
+    preemptive dispatcher pools these into per-virtual-channel wfq
+    weights."""
+    if not config.bandwidth_shares:
+        psum = sum(st.priority for st in streams)
+        return {st.name: st.priority / psum for st in streams}
+    shares = {st.name: config.bandwidth_shares.get(st.name, 0.0)
+              for st in streams}
+    missing = [st for st in streams if shares[st.name] <= 0.0]
+    if missing:
+        rest = 1.0 - sum(config.bandwidth_shares.values())
+        if rest <= 1e-12:
+            raise ValueError(
+                f"tenants {[st.name for st in missing]} have no bandwidth "
+                "share and the explicit shares leave no headroom")
+        psum = sum(st.priority for st in missing)
+        for st in missing:
+            shares[st.name] = rest * st.priority / psum
+    return shares
+
+
+class DynamicDispatcher:
+    """Instruction-level preemptive dispatch: the ready/inflight/
+    executed state machine over per-request compiled programs.
+
+    Where the round loop serves synchronized joint batches (a short
+    request waits for the whole round makespan), this dispatcher admits
+    each request's solo-compiled program to an
+    :class:`~.simulator.IncrementalSimulator` the moment a per-tenant
+    in-flight slot is free, and advances simulated time *event by
+    event*: the machine state between two events is exactly the set of
+    committed instructions, so a newly admitted program joins the
+    in-flight frontier at an instruction boundary — committed work is
+    never rolled back, and nothing that starts at-or-after the event
+    time has been granted when the event is processed.
+
+    Request state machine (every transition logged as a
+    :class:`DispatchEvent`):
+
+        arrival --admit--> queued --dispatch--> inflight
+                |                                   |
+                +--reject / shed-oldest             +--all instructions
+                                                       committed
+                                                       --> executed
+
+    Tenant ``i`` (stream declaration order) rides MIU virtual channel
+    ``i % vc_count``; each channel's wfq weight pools its tenants'
+    resolved shares (``_resolve_stream_shares``), so bandwidth
+    guarantees keep defending tail latency across *requests*, not
+    rounds.  ``max_batch_per_tenant`` bounds a tenant's concurrent
+    in-flight requests.  With ``drain=False`` dispatch freezes at the
+    first event at-or-after the horizon (in-flight programs still
+    drain; admission continues so conservation stays exact).
+
+    The whole run is a pure function of (streams, config, platform,
+    policy): arrivals come from the same seeded ``RequestStream``,
+    every tie in the simulator breaks deterministically, and the event
+    loop holds no hidden state — same seed, bit-identical result."""
+
+    def __init__(self, owner: ServingSimulator,
+                 streams: list[TenantStream], config: ServingConfig):
+        self.owner = owner
+        self.streams = streams
+        self.config = config
+        self.by_name = {st.name: st for st in streams}
+        vc = max(config.vc_count, 1)
+        self.chan_of = {st.name: i % vc for i, st in enumerate(streams)}
+        shares = _resolve_stream_shares(streams, config)
+        weights: dict[int, float] = {}
+        for st in streams:
+            c = self.chan_of[st.name]
+            weights[c] = weights.get(c, 0.0) + shares[st.name]
+        self.sim = IncrementalSimulator(
+            owner.platform, arbitration=config.vc_arbitration,
+            channel_weights=weights)
+        self.events: list[DispatchEvent] = []
+
+    # ------------------------------------------------------------- snapshots
+    def _snap(self, t: float, kind: str, tenant: str, seq: int) -> None:
+        queued = tuple((r.tenant, r.seq) for st in self.streams
+                       for r in self._queues[st.name])
+        inflight = tuple((r.tenant, r.seq)
+                         for _, r in sorted(self._inflight.items()))
+        self.events.append(DispatchEvent(
+            t, kind, tenant, seq, queued, inflight,
+            self._executed, self._rejected))
+
+    # ------------------------------------------------------------- the loop
+    def run(self) -> ServingResult:
+        config, streams = self.config, self.streams
+        stats = {st.name: ServingStats(
+            tenant=st.name, slo_s=st.slo_s,
+            queue_capacity=(st.queue_capacity
+                            if st.queue_capacity is not None
+                            else config.queue_capacity))
+            for st in streams}
+        arrivals = RequestStream(list(streams), config.horizon_s,
+                                 config.seed).generate()
+        self._queues: dict[str, deque[RequestRecord]] = {
+            st.name: deque() for st in streams}
+        self._inflight: dict[int, RequestRecord] = {}   # pid -> record
+        self._executed = 0
+        self._rejected = 0
+        queues = self._queues
+        records: list[RequestRecord] = []
+        rounds: list[DispatchRound] = []
+        hit_of: dict[int, bool] = {}
+        n_inflight = {st.name: 0 for st in streams}
+        hits0, misses0 = self.owner.cache_hits, self.owner.cache_misses
+        sim = self.sim
+        heap: list[tuple[float, int]] = []
+        frozen = False
+        inf = float("inf")
+        ai, n_arr = 0, len(arrivals)
+        t_end = 0.0
+
+        def admit(req: Request, t: float) -> None:
+            s = stats[req.tenant]
+            q = queues[req.tenant]
+            rec = RequestRecord(req.tenant, req.seq, req.arrival_s)
+            records.append(rec)
+            s.submitted += 1
+            if s.queue_capacity is not None and len(q) >= s.queue_capacity:
+                if config.admission == "reject":
+                    rec.status = "rejected"
+                    s.rejected += 1
+                    self._rejected += 1
+                    self._snap(t, "reject", rec.tenant, rec.seq)
+                    return
+                old = q.popleft()
+                old.status = "rejected"
+                s.rejected += 1
+                self._rejected += 1
+                self._snap(t, "reject", old.tenant, old.seq)
+            q.append(rec)
+            s.max_queue_depth = max(s.max_queue_depth, len(q))
+            self._snap(t, "arrive", rec.tenant, rec.seq)
+
+        def try_dispatch(name: str, t: float) -> None:
+            if frozen:
+                return
+            q = queues[name]
+            st = self.by_name[name]
+            while q and n_inflight[name] < config.max_batch_per_tenant:
+                rec = q.popleft()
+                res, hit = self.owner._compile_solo(st, config)
+                pid = sim.add_program(res.codegen, release_s=t,
+                                      channel=self.chan_of[name])
+                rec.dispatch_s = t
+                self._inflight[pid] = rec
+                hit_of[pid] = hit
+                n_inflight[name] += 1
+                self._snap(t, "dispatch", rec.tenant, rec.seq)
+
+        while True:
+            next_arr = arrivals[ai].arrival_s if ai < n_arr else inf
+            next_comp = heap[0][0] if heap else inf
+            if sim.has_pending:
+                for pid, fin in sim.advance(min(next_arr, next_comp)):
+                    heappush(heap, (fin, pid))
+                next_comp = heap[0][0] if heap else inf
+            t = min(next_arr, next_comp)
+            if t == inf:
+                if sim.has_pending or self._inflight:
+                    raise RuntimeError(
+                        "preemptive dispatcher stalled with in-flight work "
+                        "and no next event")
+                if not frozen and any(q for q in queues.values()):
+                    raise RuntimeError(
+                        "preemptive dispatcher stalled with queued requests "
+                        "and free dispatch slots")
+                break
+            if not config.drain and not frozen and t >= config.horizon_s:
+                # dispatch freeze: in-flight work drains (committed work
+                # is never rolled back), admissions continue, no new
+                # program joins the machine
+                frozen = True
+            t_end = max(t_end, t)
+            if next_comp <= next_arr:
+                fin, pid = heappop(heap)
+                rec = self._inflight.pop(pid)
+                prog = sim.programs[pid]
+                s = stats[rec.tenant]
+                rec.status = "served"
+                rec.finish_s = fin
+                s.served += 1
+                s.latencies_s.append(fin - rec.arrival_s)
+                s.miu_wait_s += prog.miu_wait_s
+                s.miu_bytes += prog.miu_bytes
+                s.busy_s += fin - rec.dispatch_s
+                n_inflight[rec.tenant] -= 1
+                self._executed += 1
+                rounds.append(DispatchRound(
+                    rec.dispatch_s, fin - rec.dispatch_s,
+                    ((rec.tenant, rec.seq),), hit_of[pid]))
+                self._snap(fin, "complete", rec.tenant, rec.seq)
+                try_dispatch(rec.tenant, fin)
+            else:
+                admit(arrivals[ai], next_arr)
+                ai += 1
+                tenant = records[-1].tenant
+                try_dispatch(tenant, next_arr)
+        for name, q in queues.items():
+            stats[name].in_queue = len(q)
+        return ServingResult(
+            stats=stats, requests=records, rounds=rounds,
+            arrivals=arrivals, end_s=t_end,
+            compile_cache_hits=self.owner.cache_hits - hits0,
+            compile_cache_misses=self.owner.cache_misses - misses0,
+            dispatch="preemptive", events=self.events, dispatcher=self)
 
 
 def serve(streams: list[TenantStream],

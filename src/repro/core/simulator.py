@@ -68,24 +68,30 @@ channel sharing.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 from .codegen import CodegenResult
 from .isa import OpType, UnitKind
-from .perf_model import DoraPlatform
+from .perf_model import VC_ARBITRATIONS, DoraPlatform
 
 _MIU_OPS = (OpType.MIU_LOAD, OpType.MIU_STORE)
 
 
-def nearest_rank(sorted_vals, q: float) -> float:
+def nearest_rank(sorted_vals, q: float) -> float | None:
     """Deterministic nearest-rank quantile of an ascending-sorted sample
     — the idiom behind ``TenantSimStats.tail_latency_s`` (p95) and the
     serving layer's per-tenant p50/p95/p99 latency reporting.  Monotone
-    in ``q`` by construction (so p50 <= p95 <= p99 always holds)."""
-    if not sorted_vals:
-        raise ValueError("nearest_rank of an empty sample")
+    in ``q`` by construction (so p50 <= p95 <= p99 always holds).
+
+    An empty sample has no quantile: returns ``None`` (a tenant that
+    served zero requests grades as "no data", not as a phantom 0.0
+    latency).  An out-of-range ``q`` still raises — that is a caller
+    bug, not a data condition."""
     if not 0.0 <= q <= 1.0:
         raise ValueError(f"quantile must be in [0, 1], got {q}")
+    if not sorted_vals:
+        return None
     n = len(sorted_vals)
     return sorted_vals[min(n - 1, int(q * (n - 1) + 0.5))]
 
@@ -592,6 +598,383 @@ def _simulate_vc(result: CodegenResult, platform: DoraPlatform,
                 f"simulator deadlock (vc): {len(missing)} instructions "
                 f"blocked, first = {missing[:5]}")
     return st.report()
+
+
+# ---------------------------------------------------------------------------
+# Incremental replay: extend a running simulation with new programs
+# ---------------------------------------------------------------------------
+
+class _IncrProgram:
+    """One admitted program inside an :class:`IncrementalSimulator`: a
+    compiled instruction stream, its release time (nothing of it may
+    start earlier), the MIU virtual channel it rides, and the per-
+    instruction commit bookkeeping."""
+
+    __slots__ = ("pid", "result", "release_s", "channel", "n", "start",
+                 "end", "committed", "finish_s", "miu_wait_s", "miu_bytes",
+                 "startup_idx")
+
+    def __init__(self, pid: int, result: CodegenResult, release_s: float,
+                 channel: int):
+        self.pid = pid
+        self.result = result
+        self.release_s = release_s
+        self.channel = channel
+        n = len(result.program)
+        self.n = n
+        self.start = [-1.0] * n
+        self.end = [-1.0] * n
+        self.committed = 0
+        self.finish_s = release_s
+        self.miu_wait_s = 0.0        # MIU queueing behind other programs
+        self.miu_bytes = 0.0
+        # per-layer IDU dispatch cost: charged on the first instruction
+        # of each layer in stream order, exactly like _SimState
+        startup_of: dict[int, int] = {}
+        for i, m in enumerate(result.meta):
+            if m.layer_id >= 0 and m.layer_id not in startup_of:
+                startup_of[m.layer_id] = i
+        self.startup_idx = set(startup_of.values())
+
+    @property
+    def done(self) -> bool:
+        return self.committed == self.n
+
+
+class IncrementalSimulator:
+    """Event-driven machine simulation that *grows while it runs*: new
+    programs join mid-flight instead of restarting the whole replay.
+
+    The batch simulators (`_simulate_inorder` / `_simulate_vc`) need the
+    complete merged program up front — fine for a static workload, but
+    an online dispatcher learns about new requests only as simulated
+    time advances.  This class keeps the same machine primitives
+    (per-instruction durations, per-layer IDU startup, ready-list RAW
+    sync, MIU virtual channels with fifo/rr/priority/wfq arbitration)
+    over a set of *independently compiled* programs:
+
+      ``add_program``  appends a compiled ``CodegenResult`` with a
+                       release time: each unit gets the program's
+                       in-order instruction stream for that unit, and
+                       the program's MIU traffic joins the given
+                       virtual channel.
+      ``advance``      commits instructions in globally nondecreasing
+                       start-time order while the next start lies
+                       strictly below the gate, and reports programs
+                       that completed.  Committed work is never rolled
+                       back — preemption points are instruction
+                       boundaries, so a caller may add programs between
+                       ``advance`` calls at any time >= the last
+                       committed start.
+
+    Cross-program issue is *dependence-driven*, not program-order: a
+    unit holds one in-order stream per program and serves whichever
+    stream's head is ready first (ties by admission order), exactly the
+    role the batch path's compile-time merge plays — there the joint
+    schedule decides the per-unit interleaving ahead of time; here the
+    dispatcher decides it at run time from the ready list, which is the
+    paper's dynamic-orchestration pitch.  A long-running program
+    blocked on a transfer no longer head-blocks a later-admitted short
+    program on shared units; *within* one program every unit stream
+    stays strictly in order.  Deadlock is impossible: each program's
+    earliest uncommitted instruction always heads its unit stream with
+    all deps committed.
+
+    Commit-order soundness: always committing the globally minimal
+    start time means no later commit can change an earlier one — unit
+    frontiers only move forward and a newly enabled instruction is
+    never ready before the instruction that enabled it ended.  Ties
+    break non-MIU-first (in unit-key order, so an equal-time commit
+    that makes another MIU channel head ready joins that arbitration
+    pool), then by admission order.  When a commit completes a program
+    at ``T_c``, the gate caps at ``T_c``: a caller reacting to the
+    completion (dispatching a new request at ``T_c``) sees a machine
+    state in which nothing at-or-after ``T_c`` was granted yet.
+
+    MIU wait attribution is simplified relative to ``_SimState``: a
+    queued window [ready, start) charges the busy time of *other*
+    programs' occupancy intervals overlapping it (idle gaps are not
+    attributed).  The wfq deficit machinery matches ``_wfq_grant``.
+    Channels stay in admission order internally (a channel head blocked
+    on the ready list blocks its channel, as in ``_simulate_vc``).
+    """
+
+    def __init__(self, platform: DoraPlatform,
+                 arbitration: str = "fifo",
+                 channel_weights: dict[int, float] | None = None):
+        if arbitration not in VC_ARBITRATIONS:
+            raise ValueError(f"unknown vc arbitration {arbitration!r}; "
+                             f"expected one of {VC_ARBITRATIONS}")
+        self.platform = platform
+        self.arbitration = arbitration
+        self.channel_weights = dict(channel_weights or {})
+        self.programs: list[_IncrProgram] = []
+        # per-unit, per-program in-order streams: unit key -> pid ->
+        # deque of local instruction indices (deleted when exhausted,
+        # so the candidate scan only touches live programs)
+        self._queues: dict[tuple[UnitKind, int],
+                           dict[int, deque[int]]] = {}
+        self._unit_order: list[tuple[UnitKind, int]] = []
+        # MIU virtual channels (single physical MIU, as emitted by codegen)
+        self._chan_q: dict[int, list[tuple[int, int]]] = {}
+        self._chan_head: dict[int, int] = {}
+        self._chan_list: list[int] = []
+        self._deficit: dict[int, float] = {}
+        self._rr_ptr = 0
+        self._unit_free: dict[tuple[UnitKind, int], float] = {}
+        self.unit_busy: dict[tuple[UnitKind, int], float] = {}
+        # MIU occupancy history [(start, end, pid)] in service order
+        self._occ: list[tuple[float, float, int]] = []
+        # commit log [(pid, local idx, start, end)] in commit order
+        self.log: list[tuple[int, int, float, float]] = []
+        self._max_start = 0.0
+        self._pending = 0            # uncommitted instructions
+
+    # ------------------------------------------------------------- admission
+    def add_program(self, result: CodegenResult, release_s: float,
+                    channel: int = 0) -> int:
+        """Admit a compiled program released at ``release_s``; returns
+        its program id.  The release may not predate the commit
+        frontier (that work is already committed and never rolled
+        back)."""
+        if release_s < 0.0:
+            raise ValueError(f"release_s must be >= 0, got {release_s}")
+        if release_s < self._max_start - 1e-12:
+            raise ValueError(
+                f"release_s={release_s:.6g} predates the commit frontier "
+                f"{self._max_start:.6g}; committed work is never rolled "
+                "back")
+        pid = len(self.programs)
+        prog = _IncrProgram(pid, result, release_s, channel)
+        self.programs.append(prog)
+        self._pending += prog.n
+        for i, instr in enumerate(result.program.instructions):
+            key = (instr.unit_kind, instr.unit_index)
+            if instr.unit_kind == UnitKind.MIU:
+                if channel not in self._chan_q:
+                    self._chan_q[channel] = []
+                    self._chan_head[channel] = 0
+                    self._chan_list = sorted(self._chan_q)
+                    self._deficit.setdefault(channel, 0.0)
+                self._chan_q[channel].append((pid, i))
+            else:
+                if key not in self._queues:
+                    self._queues[key] = {}
+                    self._unit_order = sorted(
+                        self._queues, key=lambda k: (k[0].value, k[1]))
+                self._queues[key].setdefault(pid, deque()).append(i)
+        return pid
+
+    @property
+    def has_pending(self) -> bool:
+        return self._pending > 0
+
+    @property
+    def frontier_s(self) -> float:
+        """Latest committed start time (the no-rollback boundary)."""
+        return self._max_start
+
+    # ------------------------------------------------------------ the engine
+    def _ready(self, pid: int, li: int) -> float | None:
+        """Earliest start of instruction ``li`` of program ``pid``
+        ignoring unit occupancy, or None while a producer is
+        uncommitted.  Mirrors ``_SimState.ready_time`` with the
+        program's release time as the arrival floor."""
+        p = self.programs[pid]
+        meta = p.result.meta[li]
+        t = p.release_s
+        for d in meta.deps:
+            e = p.end[d]
+            if e < 0:
+                return None
+            if e > t:
+                t = e
+        instr = p.result.program.instructions[li]
+        if instr.op_type == OpType.MIU_LOAD and instr.body.deps:
+            for lid in instr.body.deps:
+                rs = p.result.ready_store.get(lid)
+                if rs is not None:
+                    e = p.end[rs]
+                    if e < 0:
+                        return None
+                    if e > t:
+                        t = e
+        return t
+
+    def _miu_candidates(self) -> list[tuple[int, int, int, float, float]]:
+        """Ready MIU channel heads as (channel, pid, li, service start,
+        ready)."""
+        key = (UnitKind.MIU, 0)
+        free = self._unit_free.get(key, 0.0)
+        cands = []
+        for c in self._chan_list:
+            h = self._chan_head[c]
+            q = self._chan_q[c]
+            if h >= len(q):
+                continue
+            pid, li = q[h]
+            ready = self._ready(pid, li)
+            if ready is None:
+                continue
+            cands.append((c, pid, li, max(free, ready), ready))
+        return cands
+
+    def _wfq_pick(self, pool: list[tuple[int, int, int, float, float]]
+                  ) -> tuple[int, int, int, float]:
+        """One contended DRR grant over the candidate pool — the same
+        eligibility/top-up/rotation discipline as ``_wfq_grant``."""
+        w = {c: self.channel_weights.get(c, 1.0)
+             for (c, _, _, _, _) in pool}
+        bytes_of = {}
+        for (c, pid, li, _, _) in pool:
+            bytes_of[c] = float(self.programs[pid].result.meta[li].bytes_moved)
+
+        def _tol(c: int) -> float:
+            return max(1e-9, 1e-12 * bytes_of[c])
+
+        d = self._deficit
+        eligible = {c for c in bytes_of if d[c] >= bytes_of[c] - _tol(c)}
+        if not eligible:
+            q = min((bytes_of[c] - d[c]) / w[c] for c in bytes_of)
+            for c in bytes_of:
+                d[c] = min(d[c] + q * w[c], bytes_of[c])
+            eligible = {c for c in bytes_of
+                        if d[c] >= bytes_of[c] - _tol(c)}
+        clist = self._chan_list
+        by_chan = {cd[0]: cd for cd in pool}
+        for off in range(len(clist)):
+            cc = clist[(self._rr_ptr + off) % len(clist)]
+            if cc in eligible:
+                c, pid, li, _, ready = by_chan[cc]
+                self._rr_ptr = (clist.index(cc) + 1) % len(clist)
+                d[c] = max(d[c] - bytes_of[c], 0.0)
+                return c, pid, li, ready
+        raise RuntimeError("wfq arbitration found no eligible channel")
+
+    def _grant_miu(self) -> tuple[float, int, int, int, float, bool] | None:
+        """The next MIU grant under the configured arbitration:
+        (start, channel, pid, li, ready, contended) or None."""
+        cands = self._miu_candidates()
+        if not cands:
+            return None
+        t_star = min(cd[3] for cd in cands)
+        pool = [cd for cd in cands if cd[3] == t_star]
+        arb = self.arbitration
+        if arb == "fifo":
+            # lowest admission (pid, li) — the merged IDU fetch order
+            c, pid, li, _, ready = min(pool, key=lambda cd: (cd[1], cd[2]))
+        elif arb == "priority":
+            c, pid, li, _, ready = max(
+                pool, key=lambda cd: (self.channel_weights.get(cd[0], 1.0),
+                                      -cd[1], -cd[2]))
+        elif arb == "wfq" and len(pool) > 1:
+            c, pid, li, ready = self._wfq_pick(pool)
+        else:   # rr (and an uncontended wfq grant): rotation wins
+            clist = self._chan_list
+            by_chan = {cd[0]: cd for cd in pool}
+            for off in range(len(clist)):
+                cc = clist[(self._rr_ptr + off) % len(clist)]
+                if cc in by_chan:
+                    c, pid, li, _, ready = by_chan[cc]
+                    self._rr_ptr = (clist.index(cc) + 1) % len(clist)
+                    break
+        return t_star, c, pid, li, ready, len(pool) > 1
+
+    def _next_commit(self):
+        """The globally minimal-start committable instruction:
+        (start, miu?, key-or-channel, pid, li, ready, contended) or
+        None.  Non-MIU units win start-time ties (unit-key order), so a
+        tied commit that enables another MIU channel head reaches the
+        arbitration pool before the MIU grants."""
+        best = None
+        for key in self._unit_order:
+            streams = self._queues[key]
+            if not streams:
+                continue
+            free = self._unit_free.get(key, 0.0)
+            # dependence-driven pick among program heads: earliest
+            # ready wins, ties by admission order (ascending pid)
+            for pid in sorted(streams):
+                li = streams[pid][0]
+                ready = self._ready(pid, li)
+                if ready is None:
+                    continue
+                start = max(free, ready)
+                if best is None or start < best[0]:
+                    best = (start, False, key, pid, li, ready, False)
+        miu = self._grant_miu()
+        if miu is not None:
+            start, c, pid, li, ready, contended = miu
+            if best is None or start < best[0]:
+                best = (start, True, c, pid, li, ready, contended)
+        return best
+
+    def _foreign_busy(self, w0: float, w1: float, pid: int) -> float:
+        """Busy time of other programs' MIU occupancy inside [w0, w1)."""
+        total = 0.0
+        for s, e, owner in reversed(self._occ):
+            if e <= w0:
+                break
+            if owner != pid:
+                total += max(0.0, min(e, w1) - max(s, w0))
+        return total
+
+    def advance(self, gate_s: float = float("inf")
+                ) -> list[tuple[int, float]]:
+        """Commit every instruction whose start lies strictly below the
+        gate, in nondecreasing start order; returns the programs that
+        completed as (pid, finish time).  A discovered completion at
+        ``T_c`` caps the effective gate at ``T_c`` so the caller can
+        react (dispatch at ``T_c``) before anything at-or-after ``T_c``
+        is granted — call ``advance`` again to continue."""
+        completed: list[tuple[int, float]] = []
+        eff = gate_s
+        while self._pending:
+            cand = self._next_commit()
+            if cand is None:
+                blocked = [(p.pid, i) for p in self.programs if not p.done
+                           for i in range(p.n) if p.end[i] < 0]
+                raise RuntimeError(
+                    f"incremental simulator deadlock: {len(blocked)} "
+                    f"instructions blocked, first = {blocked[:5]}")
+            start, is_miu, where, pid, li, ready, contended = cand
+            if start >= eff:
+                break
+            p = self.programs[pid]
+            instr = p.result.program.instructions[li]
+            key = (instr.unit_kind, instr.unit_index)
+            dur = _duration(li, p.result, self.platform)
+            if li in p.startup_idx:
+                dur += self.platform.startup_s
+            end = start + dur
+            if instr.op_type in _MIU_OPS:
+                if start > ready:
+                    p.miu_wait_s += self._foreign_busy(ready, start, pid)
+                p.miu_bytes += float(p.result.meta[li].bytes_moved)
+                self._occ.append((start, end, pid))
+            p.start[li] = start
+            p.end[li] = end
+            p.committed += 1
+            if end > p.finish_s:
+                p.finish_s = end
+            self._unit_free[key] = end
+            self.unit_busy[key] = self.unit_busy.get(key, 0.0) + dur
+            if is_miu:
+                self._chan_head[where] += 1
+            else:
+                stream = self._queues[where][pid]
+                stream.popleft()
+                if not stream:
+                    del self._queues[where][pid]
+            self._pending -= 1
+            if start > self._max_start:
+                self._max_start = start
+            self.log.append((pid, li, start, end))
+            if p.done:
+                completed.append((pid, p.finish_s))
+                if p.finish_s < eff:
+                    eff = p.finish_s
+        return completed
 
 
 def _tenant_stats(result: CodegenResult, end: list[float],

@@ -32,8 +32,9 @@ from repro.core.perf_model import (LATENCY_MODELS, VC_ARBITRATIONS,
                                    CandidateMode, DoraPlatform, Policy,
                                    TilePlan)
 from repro.core import serving as serving_mod
-from repro.core.serving import (ADMISSION_POLICIES, RequestRecord,
-                                ServingConfig, ServingStats, TenantStream)
+from repro.core.serving import (ADMISSION_POLICIES, DISPATCH_MODES,
+                                DispatchEvent, RequestRecord, ServingConfig,
+                                ServingStats, TenantStream)
 from repro.core.simulator import TenantSimStats
 
 pytestmark = pytest.mark.docs
@@ -343,16 +344,43 @@ def test_serving_md_documents_the_stats_surface(serving_tokens):
                          f"from docs/SERVING.md: {missing}")
 
 
+def test_serving_md_documents_every_dispatch_mode():
+    # raw-text containment like the admission policies: backticked
+    # mode names, plus the selecting knob's constant tuple
+    text = SERVING_MD.read_text()
+    missing = [m for m in DISPATCH_MODES if f"`{m}`" not in text]
+    assert not missing, (f"dispatch modes missing from "
+                         f"docs/SERVING.md: {missing}")
+    assert "DISPATCH_MODES" in text, (
+        "docs/SERVING.md must name DISPATCH_MODES next to the "
+        "dispatch knob")
+
+
+def test_serving_md_documents_the_dispatcher_surface(serving_tokens):
+    """The §dispatch-modes walkthrough must name the preemptive
+    machinery it describes: the dispatcher, the event record and its
+    state sets, and the incremental-simulator entry points."""
+    needed = {"DynamicDispatcher", "DispatchEvent", "IncrementalSimulator",
+              "events"}
+    needed |= {f.name for f in dataclasses.fields(DispatchEvent)
+               if f.name in ("queued", "inflight", "executed")}
+    missing = needed - serving_tokens
+    assert not missing, (f"dispatcher surface missing from "
+                         f"docs/SERVING.md: {missing}")
+
+
 def test_serving_md_names_only_real_symbols(serving_tokens):
     """Ghost-symbol check: every serving-flavored token the doc
     backticks must exist in the serving module (or be a field of one of
     its dataclasses) — catches renames and deletions."""
     names: set[str] = set(dir(serving_mod)) | set(dir(core_pkg))
-    for cls in (ServingConfig, TenantStream, ServingStats, RequestRecord):
+    for cls in (ServingConfig, TenantStream, ServingStats, RequestRecord,
+                DispatchEvent):
         names |= {f.name for f in dataclasses.fields(cls)}
     symbol_like = {
         t for t in serving_tokens
-        if t.startswith(("Serving", "Request", "Tenant", "Dispatch"))
+        if t.startswith(("Serving", "Request", "Tenant", "Dispatch",
+                         "Dynamic", "Incremental", "DISPATCH"))
         or t in {"serve", "ADMISSION_POLICIES", "SERVING_SCENARIOS",
                  "SLO_FACTOR", "sweep", "scenario_streams"}}
     # bench symbols live in bench_serving.py, not the core module

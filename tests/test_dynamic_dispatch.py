@@ -1,0 +1,406 @@
+"""Preemptive-dispatcher test suite: the ready/inflight/executed state
+machine (request level, via the ``DispatchEvent`` log), the
+instruction-level commit invariants (via ``IncrementalSimulator.log``),
+determinism, the incremental-merge equivalence, the ``nearest_rank``
+edge cases, and the seeded p99 regression that locks the tentpole win
+(preemptive short-request tail <= 0.75x synchronous rounds on the
+overloaded small_pair scenario).
+
+One module-level ``ServingSimulator`` carries the solo-compile cache
+across every property example, so each distinct (model, knobs) compiles
+exactly once for the whole module."""
+
+from __future__ import annotations
+
+import pytest
+from _hyp_compat import given, settings, strategies as st
+
+from repro.core import (CompileOptions, DoraCompiler, DoraPlatform,
+                        IncrementalSimulator, MultiTenantWorkload, Policy,
+                        ServingConfig, ServingSimulator, TenantStream,
+                        mlp_graph, nearest_rank, simulate)
+from repro.configs import paper_models
+
+PLAT = DoraPlatform.vck190()
+
+TINY_A = mlp_graph("tiny_a", 16, [64, 64, 64])
+TINY_B = mlp_graph("tiny_b", 32, [128, 64])
+
+SIM = ServingSimulator(PLAT, Policy.dora())
+
+
+def _streams(trace_a, trace_b, cap=None):
+    return [
+        TenantStream("a", TINY_A, trace=tuple(trace_a), slo_s=2e-4,
+                     queue_capacity=cap),
+        TenantStream("b", TINY_B, trace=tuple(trace_b), slo_s=2e-4),
+    ]
+
+
+# ------------------------------------------------ strategies (shim-safe)
+
+def _cumsum(gaps):
+    t, out = 0.0, []
+    for g in gaps:
+        t += g * 1e-6
+        out.append(t)
+    return tuple(out)
+
+
+def _trace(max_len=10):
+    # inter-arrival gaps in µs, accumulated into an ascending trace
+    return st.lists(st.integers(0, 30), min_size=1,
+                    max_size=max_len).map(_cumsum)
+
+
+_capacity = st.sampled_from((1, 2, 3, None))
+_admission = st.sampled_from(("reject", "shed-oldest"))
+_max_batch = st.sampled_from((1, 2))
+_vc = st.sampled_from(((1, "fifo"), (2, "wfq"), (2, "rr"), (2, "priority")))
+_shares = st.sampled_from((None, {"a": 0.6, "b": 0.4}))
+
+
+def _preemptive_cfg(cap, admission, max_batch, vc, shares, drain=True):
+    vc_count, arb = vc
+    return ServingConfig(
+        horizon_s=3e-4, seed=0, queue_capacity=cap, admission=admission,
+        max_batch_per_tenant=max_batch, drain=drain, dispatch="preemptive",
+        vc_count=vc_count, vc_arbitration=arb, bandwidth_shares=shares)
+
+
+def _assert_conservation(res):
+    for s in res.stats.values():
+        assert s.submitted == s.served + s.rejected + s.in_queue, s
+
+
+def _assert_state_machine(res):
+    """Replay the DispatchEvent log and check, after every event, that
+    queued/inflight/executed partition the admitted universe and the
+    running counts match."""
+    admitted: set[tuple[str, int]] = set()
+    executed: set[tuple[str, int]] = set()
+    rejected = 0
+    last_t = 0.0
+    for ev in res.events:
+        assert ev.time_s >= last_t - 1e-12, "event times must be ordered"
+        last_t = max(last_t, ev.time_s)
+        key = (ev.tenant, ev.seq)
+        if ev.kind == "arrive":
+            admitted.add(key)
+        elif ev.kind == "reject":
+            admitted.discard(key)   # shed victim leaves the universe
+            rejected += 1
+        elif ev.kind == "complete":
+            executed.add(key)
+        else:
+            assert ev.kind == "dispatch", ev
+        queued, inflight = set(ev.queued), set(ev.inflight)
+        assert len(queued) == len(ev.queued)
+        assert len(inflight) == len(ev.inflight)
+        # the partition invariant: every admitted request is in exactly
+        # one of queued / inflight / executed
+        assert queued | inflight | executed == admitted
+        assert not queued & inflight
+        assert not queued & executed
+        assert not inflight & executed
+        assert ev.executed == len(executed)
+        assert ev.rejected == rejected
+
+
+def _assert_instruction_invariants(res):
+    """Commit-log invariants: nondecreasing starts, no instruction
+    before its program's release (= its request's dispatch time) or
+    before its producers' ends, per-(unit, program) streams in order."""
+    sim = res.dispatcher.sim
+    end_of: dict[tuple[int, int], float] = {}
+    seen_per_unit: dict[tuple, int] = {}
+    last_start = 0.0
+    for pid, li, start, end in sim.log:
+        assert start >= last_start - 1e-12, "commit starts must not decrease"
+        last_start = max(last_start, start)
+        prog = sim.programs[pid]
+        assert start >= prog.release_s - 1e-12, \
+            "no instruction may start before its program's release"
+        for d in prog.result.meta[li].deps:
+            assert (pid, d) in end_of, "producer must commit first"
+            assert start >= end_of[(pid, d)] - 1e-12
+        instr = prog.result.program.instructions[li]
+        ukey = (instr.unit_kind, instr.unit_index, pid)
+        prev = seen_per_unit.get(ukey, -1)
+        assert li > prev, "per-unit program streams must stay in order"
+        seen_per_unit[ukey] = li
+        end_of[(pid, li)] = end
+    # every dispatched request's program fully committed at drain
+    for pid, prog in enumerate(sim.programs):
+        assert prog.done, f"program {pid} left incomplete"
+
+
+def _assert_request_invariants(res):
+    dispatch_order: dict[str, list[int]] = {}
+    for ev in res.events:
+        if ev.kind == "dispatch":
+            dispatch_order.setdefault(ev.tenant, []).append(ev.seq)
+    for tenant, seqs in dispatch_order.items():
+        assert seqs == sorted(seqs), \
+            f"per-tenant FIFO dispatch violated for {tenant}: {seqs}"
+    for rec in res.requests:
+        if rec.status == "served":
+            assert rec.dispatch_s >= rec.arrival_s - 1e-12
+            assert rec.finish_s >= rec.dispatch_s - 1e-12
+
+
+# -------------------------------------------------- the property suite
+
+@settings(max_examples=25, deadline=None)
+@given(_trace(), _trace(), _capacity, _admission, _max_batch, _vc, _shares)
+def test_dispatcher_state_machine(trace_a, trace_b, cap, admission,
+                                  max_batch, vc, shares):
+    cfg = _preemptive_cfg(cap, admission, max_batch, vc, shares)
+    res = SIM.serve(_streams(trace_a, trace_b, cap), cfg)
+    _assert_conservation(res)
+    _assert_state_machine(res)
+    _assert_instruction_invariants(res)
+    _assert_request_invariants(res)
+    assert res.dispatch == "preemptive"
+    # drain=True leaves nothing queued or in flight
+    for s in res.stats.values():
+        assert s.in_queue == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(_trace(6), _trace(6), _admission, _max_batch)
+def test_dispatcher_no_drain_freezes_dispatch(trace_a, trace_b,
+                                              admission, max_batch):
+    """drain=False: dispatch freezes at the first event at-or-after the
+    horizon, in-flight work still completes, leftovers stay queued —
+    and conservation stays exact."""
+    cfg = ServingConfig(
+        horizon_s=2e-5, seed=0, queue_capacity=2, admission=admission,
+        max_batch_per_tenant=max_batch, drain=False, dispatch="preemptive")
+    res = SIM.serve(_streams(trace_a, trace_b, 2), cfg)
+    _assert_conservation(res)
+    _assert_state_machine(res)
+    for ev in res.events:
+        if ev.kind == "dispatch":
+            assert ev.time_s < cfg.horizon_s or ev.time_s == 0.0
+    # every dispatched program still drained (committed work is never
+    # rolled back, so in-flight requests finish)
+    assert all(p.done for p in res.dispatcher.sim.programs)
+
+
+@settings(max_examples=8, deadline=None)
+@given(_trace(8), _trace(8), _capacity, _admission, _max_batch, _vc, _shares)
+def test_dispatcher_bit_identical_reruns(trace_a, trace_b, cap, admission,
+                                         max_batch, vc, shares):
+    """Same seed, fresh simulators: the whole run — request log, event
+    log, instruction commit log — must be bit-identical."""
+    cfg = _preemptive_cfg(cap, admission, max_batch, vc, shares)
+    streams = _streams(trace_a, trace_b, cap)
+    r1 = ServingSimulator(PLAT, Policy.dora()).serve(streams, cfg)
+    r2 = ServingSimulator(PLAT, Policy.dora()).serve(streams, cfg)
+    assert [(r.tenant, r.seq, r.status, r.arrival_s, r.dispatch_s,
+             r.finish_s) for r in r1.requests] == \
+           [(r.tenant, r.seq, r.status, r.arrival_s, r.dispatch_s,
+             r.finish_s) for r in r2.requests]
+    assert r1.events == r2.events
+    assert r1.dispatcher.sim.log == r2.dispatcher.sim.log
+
+
+def test_poisson_preemptive_matches_rounds_conservation():
+    """Seeded Poisson streams through both dispatch modes see the same
+    arrival trace (arrivals are dispatch-independent) and both conserve
+    requests."""
+    streams = [TenantStream("a", TINY_A, rps=20000.0, slo_s=2e-4),
+               TenantStream("b", TINY_B, rps=15000.0, slo_s=2e-4)]
+    base = dict(horizon_s=1e-3, seed=11, queue_capacity=3,
+                admission="shed-oldest", max_batch_per_tenant=2)
+    r_rounds = SIM.serve(streams, ServingConfig(**base))
+    r_pre = SIM.serve(streams, ServingConfig(**base, dispatch="preemptive"))
+    assert r_rounds.arrivals == r_pre.arrivals
+    _assert_conservation(r_rounds)
+    _assert_conservation(r_pre)
+    # drain=True: both serve every non-rejected request
+    assert (r_pre.total_served + r_pre.total_rejected
+            == r_rounds.total_served + r_rounds.total_rejected)
+
+
+# ------------------------------------------ the seeded p99 regression
+
+def test_preemptive_beats_rounds_short_request_p99():
+    """The tentpole win, regression-locked on the overloaded small_pair
+    scenario (the CI bench's 900 rps point): the short-model tenant's
+    (NCF-S) p99 under preemptive dispatch must be <= 0.75x the
+    synchronous-rounds p99, without serving fewer requests overall.
+    Measured ~0.34x at this seed; 0.75 leaves headroom for platform
+    retunes while still failing if the round barrier ever comes back."""
+    streams = [
+        TenantStream("BERT-S", paper_models.get("BERT-S"), rps=900.0),
+        TenantStream("NCF-S", paper_models.get("NCF-S"), rps=900.0),
+    ]
+    shares = {"BERT-S": 0.6, "NCF-S": 0.4}
+    base = dict(horizon_s=0.12, seed=2026, queue_capacity=8,
+                admission="reject", max_batch_per_tenant=2,
+                vc_count=2, vc_arbitration="wfq", interleave="rr",
+                bandwidth_shares=shares)
+    r_rounds = SIM.serve(streams, ServingConfig(**base))
+    r_pre = SIM.serve(streams,
+                      ServingConfig(**base, dispatch="preemptive"))
+    p99_rounds = r_rounds.stats["NCF-S"].p99_s
+    p99_pre = r_pre.stats["NCF-S"].p99_s
+    assert p99_rounds is not None and p99_pre is not None
+    assert p99_pre <= 0.75 * p99_rounds, \
+        f"preemptive NCF-S p99 {p99_pre:.6g} vs rounds {p99_rounds:.6g}"
+    assert r_pre.total_served >= r_rounds.total_served
+
+
+# ------------------------------------- incremental simulator, directly
+
+def test_incremental_solo_matches_batch_simulate():
+    """One program through the incremental simulator is bit-identical
+    to the batch replay (same machine model, no contention)."""
+    comp = DoraCompiler(PLAT, Policy.dora())
+    for graph in (TINY_A, TINY_B):
+        res = comp.compile(graph, CompileOptions(engine="list"))
+        rep = simulate(res.codegen, PLAT)
+        inc = IncrementalSimulator(PLAT)
+        inc.add_program(res.codegen, release_s=0.0)
+        done = []
+        while inc.has_pending:
+            done += inc.advance()
+        assert len(done) == 1
+        assert done[0][1] == rep.makespan_s
+
+
+def test_incremental_release_guard_and_gate():
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res = comp.compile(TINY_A, CompileOptions(engine="list"))
+    inc = IncrementalSimulator(PLAT)
+    inc.add_program(res.codegen, release_s=0.0)
+    gate = 5e-6
+    done = inc.advance(gate_s=gate)
+    # strict gate: nothing at-or-after the gate was granted
+    assert all(start < gate for (_, _, start, _) in inc.log)
+    assert inc.frontier_s < gate
+    assert not done and inc.has_pending
+    # a release behind the commit frontier is refused (committed work
+    # is never rolled back)
+    with pytest.raises(ValueError):
+        inc.add_program(res.codegen, release_s=0.0)
+    # joining at the frontier is fine, and everything drains
+    inc.add_program(res.codegen, release_s=gate)
+    done = []
+    while inc.has_pending:
+        done += inc.advance()
+    assert sorted(pid for pid, _ in done) == [0, 1]
+    assert all(p.done for p in inc.programs)
+
+
+def test_incremental_unknown_arbitration_rejected():
+    with pytest.raises(ValueError):
+        IncrementalSimulator(PLAT, arbitration="lifo")
+
+
+def test_incremental_completion_caps_gate():
+    """advance() hands control back at a discovered completion: the
+    returned completion's finish bounds every later commit's start, so
+    a dispatcher reacting at that time never races committed work."""
+    comp = DoraCompiler(PLAT, Policy.dora())
+    res_a = comp.compile(TINY_A, CompileOptions(engine="list"))
+    res_b = comp.compile(TINY_B, CompileOptions(engine="list"))
+    inc = IncrementalSimulator(PLAT)
+    inc.add_program(res_a.codegen, release_s=0.0, channel=0)
+    inc.add_program(res_b.codegen, release_s=0.0, channel=0)
+    done = inc.advance()
+    assert done, "an ungated advance must surface the first completion"
+    first_fin = min(f for _, f in done)
+    n_committed = len(inc.log)
+    assert all(s <= first_fin for (_, _, s, _) in inc.log[:n_committed])
+    while inc.has_pending:
+        done += inc.advance()
+    assert sorted(pid for pid, _ in done) == [0, 1]
+
+
+# --------------------------------------------- incremental merge API
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2))
+def test_incremental_merge_matches_full_merge(n_tenants, split):
+    """merge(extend_from=prefix) must be bit-identical to a full
+    merge() over the same tenant list, and must not mutate the prefix."""
+    graphs = [TINY_A, TINY_B, mlp_graph("tiny_c", 8, [32, 32]),
+              mlp_graph("tiny_d", 4, [16, 16, 16])]
+    mt = MultiTenantWorkload("incr")
+    for i in range(n_tenants):
+        mt.add_tenant(f"t{i}", graphs[i], priority=1.0 + i,
+                      arrival_s=i * 1e-5)
+    split = min(split, n_tenants - 1)
+    if split == 0:
+        prev = None
+    else:
+        pre = MultiTenantWorkload("incr")
+        for t in mt.tenants[:split]:
+            pre.add_tenant(t.name, t.graph, t.priority, t.arrival_s)
+        prev = pre.merge()
+        n_prev_layers = len(prev.graph.layers)
+    inc = mt.merge(extend_from=prev)
+    full = mt.merge()
+    assert inc.tenant_of == full.tenant_of
+    assert inc.release == full.release
+    assert inc.priorities == full.priorities
+    assert inc.layer_map == full.layer_map
+    assert inc.graph.inputs == full.graph.inputs
+    assert [(l.id, l.name, l.deps) for l in inc.graph.layers] == \
+           [(l.id, l.name, l.deps) for l in full.graph.layers]
+    if prev is not None:
+        assert len(prev.graph.layers) == n_prev_layers, "prefix mutated"
+
+
+def test_incremental_merge_rejects_oversized_prefix():
+    mt = MultiTenantWorkload("incr")
+    mt.add_tenant("t0", TINY_A)
+    mt.add_tenant("t1", TINY_B)
+    big = mt.merge()
+    solo = MultiTenantWorkload("incr")
+    solo.add_tenant("t0", TINY_A)
+    with pytest.raises(ValueError):
+        solo.merge(extend_from=big)
+
+
+# ----------------------------------------- nearest_rank edge cases
+
+def test_nearest_rank_empty_returns_none():
+    assert nearest_rank([], 0.0) is None
+    assert nearest_rank([], 0.5) is None
+    assert nearest_rank([], 1.0) is None
+
+
+def test_nearest_rank_single_and_ties():
+    assert nearest_rank([3.0], 0.0) == 3.0
+    assert nearest_rank([3.0], 0.5) == 3.0
+    assert nearest_rank([3.0], 1.0) == 3.0
+    tied = [2.0, 2.0, 2.0, 9.0]
+    assert nearest_rank(tied, 0.5) == 2.0
+    assert nearest_rank(tied, 1.0) == 9.0
+    # out-of-range q is a caller bug even on an empty sample
+    with pytest.raises(ValueError):
+        nearest_rank([], -0.1)
+    with pytest.raises(ValueError):
+        nearest_rank([1.0], 1.5)
+
+
+def test_zero_served_tenant_grades_safely():
+    """A tenant that serves nothing reports None tails and 0.0 rates —
+    not a phantom 0.0-latency p99 and not a crash."""
+    streams = [
+        TenantStream("a", TINY_A, trace=(0.0,), slo_s=1e-4),
+        TenantStream("b", TINY_B, trace=(), slo_s=1e-4),
+    ]
+    res = SIM.serve(streams, ServingConfig(
+        horizon_s=1e-4, dispatch="preemptive"))
+    s = res.stats["b"]
+    assert s.submitted == s.served == s.rejected == 0
+    assert s.p50_s is None and s.p95_s is None and s.p99_s is None
+    assert s.mean_latency_s == 0.0
+    assert s.slo_violation_rate == 0.0
+    assert s.reject_rate == 0.0
+    assert res.stats["a"].served == 1

@@ -114,3 +114,27 @@ def test_milp_anytime_trace_monotone():
     res = MilpScheduler(PLAT, time_budget_s=3.0).solve(g, _table(g))
     qs = [q for _, q in res.trace]
     assert all(a >= b - 1e-15 for a, b in zip(qs, qs[1:]))
+
+
+def test_engine_race_list_within_90pct_of_exact_simulated():
+    """The paper's "90% optimality" claim, raced on the exact engines
+    under pipeline pricing: on a small joint workload the list
+    heuristic's SIMULATED makespan must be within 10% of the best the
+    MILP / GA engines achieve.  The schedule-bound ratio is looser (the
+    exact engines optimize a tighter analytic objective), so the lock
+    is on the simulated ground truth — the same metric
+    benchmarks/bench_multi_tenant.py records as list_ratio_simulated."""
+    from repro.core import CompileOptions, DoraCompiler, MultiTenantWorkload
+    from repro.configs import paper_models
+
+    mt = MultiTenantWorkload("race_pair")
+    for name in ("BERT-S", "NCF-S"):
+        mt.add_tenant(name, paper_models.get(name))
+    comp = DoraCompiler(PLAT, POLICY)
+    sim_s = {}
+    for eng in ("list", "milp", "ga"):
+        res = comp.compile(mt, CompileOptions(
+            engine=eng, latency_model="pipeline", time_budget_s=5.0))
+        sim_s[eng] = comp.simulate(res).makespan_s
+    best_exact = min(sim_s["milp"], sim_s["ga"])
+    assert best_exact / sim_s["list"] >= 0.9
