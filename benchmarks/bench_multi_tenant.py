@@ -57,6 +57,16 @@ locked scalar reference loop (``enumerate_layer_candidates_scalar``).
 ``stage1_speedup`` = scalar / cold-vectorized; compare_bench.py gates
 CI on DSE-time regressions of these columns exactly like makespans.
 
+The ``autotune`` rows run ``tuning.autotune`` (coordinate descent over
+the validated ``KnobSpace``, 25-trial budget, memoized) on the small
+scenarios against the same simulated-makespan objective, seeded at the
+hand-picked config the earlier PRs converged on (vc=2 wfq,
+priority-stride interleave, share-aware stage 1, pipeline pricing).
+``recovery_ratio`` is hand-picked over autotuned-best simulated
+makespan — >= 1 by construction since the descent starts at the hand
+pick, and how far above 1 is what the search found that the hand pick
+missed.  ``best_sim_s`` gates in CI exactly like the other makespans.
+
 The ``latency_model`` rows compare the two stage-1 pricing models
 (``CompileOptions.latency_model``): per tenant compiled *solo*, the
 analytic table's schedule-vs-simulator ratio against the
@@ -81,7 +91,8 @@ import json
 import time
 
 from repro.core import (LATENCY_MODELS, CompileOptions, DoraCompiler,
-                        DoraPlatform, MultiTenantWorkload, Policy,
+                        DoraPlatform, KnobConfig, KnobSpace,
+                        MultiTenantWorkload, Policy, autotune,
                         build_candidate_table, candidate_memo_stats,
                         clear_candidate_memo, enumerate_layer_candidates_scalar,
                         interleave_aware_bound, interleave_stream,
@@ -399,6 +410,67 @@ def latency_model_cmp(scenario: str, vc: int = 2) -> dict:
     return out
 
 
+TUNE_BUDGET = 25
+TUNE_SCENARIOS = ("small_pair", "small_trio")
+
+
+def autotune_rows(scenario: str, budget: int = TUNE_BUDGET) -> dict:
+    """Auto-tune the knob vector on one small scenario against the
+    simulated joint makespan, seeded at the hand-picked config
+    (vc=2 wfq, priority interleave, share-aware stage 1, pipeline
+    pricing, the qos_sweep shares on the trio).  The hand pick is
+    trial 0, so ``best_sim_s <= hand_picked_sim_s`` holds structurally
+    and ``recovery_ratio`` (hand / best) measures what the remaining
+    ``budget - 1`` trials bought."""
+    if scenario not in TUNE_SCENARIOS:
+        raise ValueError(
+            f"autotune_rows runs on {TUNE_SCENARIOS}, got {scenario!r}")
+    graphs = scenario_graphs(scenario)
+    mt = MultiTenantWorkload(scenario)
+    for name, g in graphs.items():
+        mt.add_tenant(name, g)
+    split = (tuple(QOS_SHARES[n] for n in graphs)
+             if scenario == "small_trio" else None)
+    hand = KnobConfig(engine="list", vc_count=2, vc_arbitration="wfq",
+                      share_split=split, interleave="priority",
+                      share_aware_stage1=True, latency_model="pipeline")
+    space = KnobSpace(share_split=(None,) if split is None
+                      else (None, split))
+    res = autotune(mt, budget=budget, space=space, seed=0, start=hand,
+                   platform=PLAT)
+    assert res.trials[0].knobs == hand
+    hand_sim_s = res.trials[0].objective_s
+    return {
+        "budget": res.budget,
+        "evaluations": res.evaluations,
+        "space_size": space.size,
+        "hand_picked_sim_s": hand_sim_s,
+        "best_sim_s": res.best_objective_s,
+        "recovery_ratio": hand_sim_s / res.best_objective_s,
+        "best_knobs": {
+            "vc_count": res.best.vc_count,
+            "vc_arbitration": res.best.vc_arbitration,
+            "interleave": res.best.interleave,
+            "share_aware_stage1": res.best.share_aware_stage1,
+            "latency_model": res.best.latency_model,
+            "explicit_shares": res.best.share_split is not None,
+        },
+    }
+
+
+def emit_autotune(emit, scenario: str, row: dict) -> None:
+    pre = f"multi_tenant.{scenario}.autotune"
+    k = row["best_knobs"]
+    emit(f"{pre}.best_sim_s", row["best_sim_s"],
+         f"vc={k['vc_count']} {k['vc_arbitration']},"
+         f"ilv={k['interleave']},share_aware={k['share_aware_stage1']},"
+         f"{k['latency_model']},explicit_shares={k['explicit_shares']}")
+    emit(f"{pre}.recovery_ratio", row["recovery_ratio"],
+         f"hand_picked={row['hand_picked_sim_s']:.6g}s over best; "
+         f"{row['evaluations']}/{row['budget']} unique trials of "
+         f"{row['space_size']} vectors")
+
+
 RACE_ENGINES = ("list", "milp", "ga")
 RACE_SCENARIOS = ("small_pair", "small_trio")
 
@@ -581,6 +653,14 @@ def main(emit, scenarios: tuple[str, ...] | None = None,
             race = engine_race(scenario)
             results[scenario]["engine_race"] = race
             emit_engine_race(emit, scenario, race)
+
+    # knob auto-tuning from the hand-picked config (small scenarios:
+    # each trial is a full compile+simulate)
+    for scenario in selected:
+        if scenario in TUNE_SCENARIOS:
+            tune = autotune_rows(scenario)
+            results[scenario]["autotune"] = tune
+            emit_autotune(emit, scenario, tune)
 
     # compile-time instrumentation + stage-1 enumeration speed (cold
     # vectorized vs memo-warm vs scalar reference); stage1_speed clears

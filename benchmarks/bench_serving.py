@@ -27,13 +27,27 @@ join the inflight instruction frontier mid-flight).  ``--dispatch``
 restricts to one mode; the CI determinism check runs the preemptive
 sweep twice and requires byte-identical JSON.
 
+The ``shifting_mix`` rows benchmark the adaptive share policy
+(``tuning.AdaptiveSharePolicy`` via ``ServingConfig.policy``) on the
+scenario static shares cannot serve: two latency-sensitive NCF-S
+tenants whose request rates surge in *opposite* halves of the horizon
+(``step_trace``), around a constant BERT-S batch hog, under preemptive
+dispatch.  Each static split of the surgers' pooled share is swept
+next to the adaptive run; the measured headline (locked by
+tests/test_tuning.py) is that the adaptive run Pareto-dominates every
+static split — each surger gets more than the whole static pool
+*during its own surge* — reported as ``worst_surger_p99_s`` per
+variant and the ``adaptive_margin`` summary row.
+
 ``--json PATH`` merges the serving rows into an existing artifact under
 each scenario's ``serving`` (rounds) and ``serving_preemptive`` keys
+and the shifting-mix sweep under the top-level ``shifting_mix`` key
 (or creates the file), so one artifact carries the static
-co-scheduling rows and both serving sweeps.
+co-scheduling rows and every serving sweep.
 
 Usage: PYTHONPATH=src python benchmarks/bench_serving.py
        PYTHONPATH=src python benchmarks/bench_serving.py --rps 150,900
+       PYTHONPATH=src python benchmarks/bench_serving.py --shifting-mix
        PYTHONPATH=src python benchmarks/bench_serving.py \
            --scenario small_pair --json BENCH_multi_tenant.json
    or: PYTHONPATH=src python -m benchmarks.run serving
@@ -44,8 +58,9 @@ from __future__ import annotations
 import json
 import os
 
-from repro.core import (CompileOptions, DoraCompiler, DoraPlatform, Policy,
-                        ServingConfig, ServingSimulator, TenantStream)
+from repro.core import (AdaptiveSharePolicy, CompileOptions, DoraCompiler,
+                        DoraPlatform, Policy, ServingConfig,
+                        ServingSimulator, TenantStream, step_trace)
 from repro.configs import paper_models
 
 PLAT = DoraPlatform.vck190()
@@ -191,6 +206,97 @@ def emit_sweep(emit, scenario: str, sw: dict) -> None:
              f"end_s={row['end_s']:.6g}")
 
 
+# shifting-mix scenario: two NCF-S surgers stepping anti-correlated at
+# half-horizon around a constant BERT-S batch hog (preemptive dispatch);
+# statics sweep the surgers' split of their pooled 0.6 share
+SHIFT_HI, SHIFT_LO = 2000.0, 150.0
+SHIFT_BATCH_RPS = 800.0
+SHIFT_BATCH_SHARE = 0.4
+SHIFT_STATIC_SPLITS = (0.1, 0.3, 0.5)   # surge-early's static share
+SHIFT_SURGERS = ("surge-early", "surge-late")
+
+
+def _shift_streams(seed: int) -> list[TenantStream]:
+    early = step_trace(SHIFT_HI, SHIFT_LO, HORIZON_S / 2, HORIZON_S,
+                       seed=seed, name="surge-early")
+    late = step_trace(SHIFT_LO, SHIFT_HI, HORIZON_S / 2, HORIZON_S,
+                      seed=seed, name="surge-late")
+    ncf = paper_models.get("NCF-S")
+    slo_n = SLO_FACTOR * _solo_makespan("NCF-S")
+    return [TenantStream("surge-early", ncf, trace=early, slo_s=slo_n),
+            TenantStream("surge-late", ncf, trace=late, slo_s=slo_n),
+            TenantStream("batch", paper_models.get("BERT-S"),
+                         rps=SHIFT_BATCH_RPS,
+                         slo_s=SLO_FACTOR * _solo_makespan("BERT-S"))]
+
+
+def shifting_mix(seed: int = SEED) -> dict:
+    """The adaptive-vs-static shifting-mix sweep: every static split of
+    the surgers' pooled share, then the adaptive policy from the even
+    split.  Per variant: per-tenant p99/violation rows plus the binding
+    ``worst_surger_p99_s``; the summary ``adaptive_margin`` is the best
+    static's worst-surger p99 over the adaptive run's (> 1 means the
+    adaptive run beats every static split on the metric a static split
+    is chosen to optimize)."""
+    sim = ServingSimulator(PLAT, Policy.dora())
+    streams = _shift_streams(seed)
+    out: dict = {
+        "seed": seed, "horizon_s": HORIZON_S,
+        "step_s": HORIZON_S / 2, "rps_hi": SHIFT_HI, "rps_lo": SHIFT_LO,
+        "batch_rps": SHIFT_BATCH_RPS, "dispatch": "preemptive",
+        "slo_s": {st.name: st.slo_s for st in streams},
+        "variants": {},
+    }
+
+    def run(label: str, shares: dict, policy=None) -> float:
+        cfg = ServingConfig(
+            horizon_s=HORIZON_S, seed=seed, queue_capacity=QUEUE_CAPACITY,
+            max_batch_per_tenant=MAX_BATCH, dispatch="preemptive",
+            vc_count=4, vc_arbitration="wfq", interleave="rr",
+            bandwidth_shares=shares, policy=policy)
+        res = sim.serve(streams, cfg)
+        row: dict = {"shares": shares, "reweights": len(res.reweights),
+                     "tenants": {}}
+        for name, s in res.stats.items():
+            row["tenants"][name] = {
+                "p99_s": s.p99_s,
+                "slo_violation_rate": s.slo_violation_rate,
+                "served": s.served,
+                "rejected": s.rejected,
+            }
+        worst = max(res.stats[n].p99_s for n in SHIFT_SURGERS)
+        row["worst_surger_p99_s"] = worst
+        out["variants"][label] = row
+        return worst
+
+    static_worst = [
+        run(f"static_{sa:.1f}",
+            {"surge-early": sa, "surge-late": round(0.6 - sa, 2),
+             "batch": SHIFT_BATCH_SHARE})
+        for sa in SHIFT_STATIC_SPLITS]
+    ada_worst = run("adaptive",
+                    {"surge-early": 0.3, "surge-late": 0.3,
+                     "batch": SHIFT_BATCH_SHARE},
+                    policy=AdaptiveSharePolicy())
+    out["adaptive_margin"] = min(static_worst) / ada_worst
+    return out
+
+
+def emit_shifting_mix(emit, sw: dict) -> None:
+    pre = "shifting_mix"
+    for label, row in sw["variants"].items():
+        for name, t in row["tenants"].items():
+            emit(f"{pre}.{label}.{name}.p99_s", t["p99_s"],
+                 f"viol={t['slo_violation_rate']:.3g},"
+                 f"served={t['served']},rejected={t['rejected']}")
+        emit(f"{pre}.{label}.worst_surger_p99_s",
+             row["worst_surger_p99_s"],
+             f"reweights={row['reweights']}")
+    emit(f"{pre}.adaptive_margin", sw["adaptive_margin"],
+         "best static worst-surger p99 / adaptive's; > 1 = adaptive "
+         "Pareto-dominates every static split")
+
+
 def main(emit, scenarios: tuple[str, ...] | None = None,
          results: dict | None = None,
          rps_points: tuple[int, ...] = RPS_SWEEP,
@@ -213,6 +319,13 @@ def main(emit, scenarios: tuple[str, ...] | None = None,
             key = "serving" if mode == "rounds" else "serving_preemptive"
             results.setdefault(scenario, {})[key] = sw
             emit_sweep(emit, scenario, sw)
+    # the adaptive-vs-static shifting-mix sweep rides along on full runs
+    # (a restricted --scenario smoke skips it; --shifting-mix runs it
+    # alone)
+    if scenarios is None:
+        sw = shifting_mix()
+        results["shifting_mix"] = sw
+        emit_shifting_mix(emit, sw)
     return results
 
 
@@ -232,6 +345,10 @@ if __name__ == "__main__":
                          "synchronous, instruction-level preemptive, or "
                          "both (default: both; the CI determinism check "
                          "runs two preemptive-only invocations)")
+    ap.add_argument("--shifting-mix", action="store_true",
+                    help="only run the adaptive-vs-static shifting-mix "
+                         "sweep (anti-correlated tenant surges, "
+                         "preemptive dispatch)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="merge the serving rows into this JSON artifact "
                          "under each scenario's 'serving' key (created "
@@ -256,9 +373,17 @@ if __name__ == "__main__":
     if args.json and os.path.exists(args.json):
         with open(args.json) as f:
             results = json.load(f)
-    scenarios = (args.scenario,) if args.scenario else None
-    main(_emit, scenarios=scenarios, results=results, rps_points=rps_points,
-         dispatch=args.dispatch)
+    if args.shifting_mix:
+        if args.scenario:
+            ap.error("--shifting-mix runs its own fixed scenario; "
+                     "--scenario cannot be combined with it")
+        sw = shifting_mix()
+        results["shifting_mix"] = sw
+        emit_shifting_mix(_emit, sw)
+    else:
+        scenarios = (args.scenario,) if args.scenario else None
+        main(_emit, scenarios=scenarios, results=results,
+             rps_points=rps_points, dispatch=args.dispatch)
 
     if args.json:
         with open(args.json, "w") as f:

@@ -38,6 +38,16 @@ point) is skipped by ``flatten`` and never compared.  The
 ``engine_race`` rows (``sched_s``, ``simulated_s``, ``wall_s``,
 ratios) are diagnostics, deliberately outside every gated key set.
 
+Tuning rows (PR 9) gate on both sides of the loop: the offline
+``autotune`` rows' ``best_sim_s`` gates like any simulated makespan
+and ``recovery_ratio`` (hand-picked over autotuned makespan) gates as
+higher-is-better — a drop means the search stopped recovering the
+hand pick; the shifting-mix rows' per-tenant ``p99_s`` /
+``worst_surger_p99_s`` gate like serving tails and
+``adaptive_margin`` (best static's worst-surger p99 over the adaptive
+run's) gates higher-is-better — it falling below 1 would mean the
+adaptive policy stopped beating every static share split.
+
 Usage: PYTHONPATH=src python benchmarks/compare_bench.py fresh.json \
            [--baseline BENCH_multi_tenant.json] [--threshold 0.10] \
            [--time-threshold 0.25]
@@ -59,13 +69,15 @@ _GATED_PARENTS = ("solo_sim",)
 # noise floor (timer jitter dominates sub-5ms rows)
 _TIME_PARENTS = ("compile",)
 _TIME_KEYS = ("stage1_vectorized_s", "stage1_memo_warm_s")
-# higher-is-better DSE rows: a *drop* beyond --time-threshold fails
-_TIME_HIGHER_BETTER = ("stage1_speedup",)
+# higher-is-better rows: a *drop* beyond --time-threshold fails
+# (stage-1 speedup, autotune recovery, adaptive-vs-static margin)
+_TIME_HIGHER_BETTER = ("stage1_speedup", "recovery_ratio",
+                       "adaptive_margin")
 _TIME_FLOOR_S = 0.005
 # online-serving leaves (bench_serving.py): per-tenant p99 tail
 # latencies gate relatively like makespans; SLO-violation rates gate on
 # absolute delta (the baseline is often exactly 0.0)
-_SERVING_KEYS = ("p99_s",)
+_SERVING_KEYS = ("p99_s", "worst_surger_p99_s")
 _RATE_KEYS = ("slo_violation_rate",)
 
 
@@ -142,7 +154,7 @@ def compare(fresh: dict, baseline: dict, threshold: float,
             if rel < -time_threshold:
                 regressions.append(
                     f"{label}: {base:.6g}x -> {new:.6g}x "
-                    f"({rel * 100:.1f}% stage-1 speedup drop)")
+                    f"({rel * 100:.1f}% {path[-1]} drop)")
             elif rel > time_threshold:
                 improvements.append(
                     f"{label}: {base:.6g}x -> {new:.6g}x "

@@ -34,6 +34,9 @@ from .serving import (ADMISSION_POLICIES, DISPATCH_MODES, DispatchEvent,
                       ServingResult, ServingSimulator, ServingStats,
                       TenantStream, serve)
 from .simulator import (IncrementalSimulator, SimReport, TenantSimStats,
-                        nearest_rank, simulate)
+                        TenantTelemetry, nearest_rank, simulate)
+from .tuning import (TUNE_OBJECTIVES, AdaptiveSharePolicy, KnobConfig,
+                     KnobSpace, ShareDecision, TuneResult, TuneTrial,
+                     autotune, step_trace)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

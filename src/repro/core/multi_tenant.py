@@ -122,6 +122,31 @@ class MultiTenantWorkload:
         self.tenants.append(spec)
         return spec
 
+    def with_knobs(self, *, bandwidth_shares: dict[str, float] | None = None,
+                   interleave: str | None = None,
+                   mmu_cap: int | None = None,
+                   share_aware_stage1: bool | None = None
+                   ) -> MultiTenantWorkload:
+        """A copy of this workload with workload-level knobs replaced —
+        the auto-tuner's trial surface (``tuning.autotune`` re-knobs
+        one declared tenant set per trial without re-merging graphs).
+        The frozen ``TenantSpec``s are shared, not copied; a None
+        argument keeps the current value (shares/mmu_cap therefore
+        cannot be *cleared* here — build a fresh workload for that)."""
+        mt = MultiTenantWorkload(
+            self.name, list(self.tenants),
+            mmu_cap=self.mmu_cap if mmu_cap is None else mmu_cap,
+            interleave=self.interleave if interleave is None else interleave,
+            bandwidth_shares=(self.bandwidth_shares
+                              if bandwidth_shares is None
+                              else dict(bandwidth_shares)),
+            share_aware_stage1=(self.share_aware_stage1
+                                if share_aware_stage1 is None
+                                else share_aware_stage1))
+        if mt.bandwidth_shares is not None:
+            mt.resolve_bandwidth_shares()    # validate the new shares
+        return mt
+
     def resolve_bandwidth_shares(self) -> dict[int, float]:
         """Tenant index -> guaranteed DRAM bandwidth fraction.
 

@@ -73,7 +73,8 @@ from .graph import WorkloadGraph
 from .interleave import POLICIES as INTERLEAVE_POLICIES
 from .multi_tenant import QOS_POLICIES, TENANT_SEP, MultiTenantWorkload
 from .perf_model import LATENCY_MODELS, DoraPlatform, Policy
-from .simulator import IncrementalSimulator, SimReport, nearest_rank
+from .simulator import (IncrementalSimulator, SimReport, TenantTelemetry,
+                        nearest_rank)
 
 # admission-control policies for a full queue (docs-synced by
 # tests/test_docs.py): "reject" drops the arriving request,
@@ -234,6 +235,22 @@ class ServingConfig:
                                 tenant's *concurrent in-flight*
                                 requests instead of its per-round
                                 batch.
+      ``policy``                optional online share policy (duck-
+                                typed ``start(shares)`` /
+                                ``observe(time_s, telemetry)``, e.g.
+                                ``tuning.AdaptiveSharePolicy``).  When
+                                set, the loop seeds it with the
+                                resolved tenant shares, feeds it
+                                per-tenant ``TenantTelemetry`` after
+                                every round (rounds mode) or completion
+                                (preemptive mode), and applies each
+                                returned re-weight to the next
+                                dispatch; every decision is logged
+                                (``DispatchRound.shares``, "reweight"
+                                ``DispatchEvent``s,
+                                ``ServingResult.reweights``), so runs
+                                stay pure seeded functions of their
+                                inputs.
     """
 
     horizon_s: float = 1.0
@@ -252,6 +269,7 @@ class ServingConfig:
     latency_model: str | None = None
     share_aware_stage1: bool | None = None
     mmu_cap: int | None = None
+    policy: object | None = None
 
     def __post_init__(self) -> None:
         if self.horizon_s <= 0:
@@ -284,6 +302,12 @@ class ServingConfig:
             raise ValueError(f"unknown latency_model "
                              f"{self.latency_model!r}; expected one of "
                              f"{LATENCY_MODELS}")
+        if self.policy is not None and not (
+                callable(getattr(self.policy, "start", None))
+                and callable(getattr(self.policy, "observe", None))):
+            raise ValueError(
+                "policy must expose start(shares) and observe(time_s, "
+                f"telemetry) — got {type(self.policy).__name__}")
         # vc_count / vc_arbitration are validated by DoraPlatform.with_vc
         # at serve time (the platform owns those invariants)
 
@@ -311,12 +335,19 @@ class RequestRecord:
 class DispatchRound:
     """One batch the machine served: start time, joint makespan, the
     (tenant, seq) requests in merged-slot order, and whether the
-    compile+simulate came from the batch-shape cache."""
+    compile+simulate came from the batch-shape cache.
+
+    ``shares`` records the effective per-tenant bandwidth-share vector
+    the round dispatched under — None for static runs; under an
+    adaptive ``ServingConfig.policy`` it is the policy's current
+    vector, so the re-weight trajectory is replayable from the round
+    log alone."""
 
     start_s: float
     makespan_s: float
     requests: tuple[tuple[str, int], ...]
     cache_hit: bool
+    shares: tuple[tuple[str, float], ...] | None = None
 
 
 @dataclass
@@ -391,8 +422,12 @@ class DispatchEvent:
     ``kind`` is one of ``arrive`` (admitted to its tenant queue),
     ``reject`` (dropped — the newcomer under "reject", the shed queue
     head under "shed-oldest"), ``dispatch`` (popped from its queue,
-    compiled program admitted to the incremental simulator), or
-    ``complete`` (every instruction committed; request served).
+    compiled program admitted to the incremental simulator),
+    ``complete`` (every instruction committed; request served), or
+    ``reweight`` (the adaptive ``ServingConfig.policy`` accepted a new
+    share vector — recorded in ``shares``; the (tenant, seq) names the
+    completion that triggered it, and the request partition state is
+    unchanged).
 
     ``queued``/``inflight`` list (tenant, seq) pairs in queue/admission
     order; ``executed``/``rejected`` are running counts.  At every
@@ -410,6 +445,7 @@ class DispatchEvent:
     inflight: tuple[tuple[str, int], ...]
     executed: int
     rejected: int
+    shares: tuple[tuple[str, float], ...] | None = None
 
 
 @dataclass
@@ -434,6 +470,9 @@ class ServingResult:
     dispatch: str = "rounds"
     events: list[DispatchEvent] = field(default_factory=list)
     dispatcher: "DynamicDispatcher | None" = None
+    # accepted adaptive-policy re-weights (ShareDecision objects from
+    # core/tuning.py), in decision order; empty for static runs
+    reweights: list = field(default_factory=list)
 
     @property
     def total_served(self) -> int:
@@ -463,23 +502,30 @@ class ServingSimulator:
 
     # ------------------------------------------------------------- dispatch
     def _round_key(self, batch: list[tuple[TenantStream, int]],
-                   config: ServingConfig) -> tuple:
-        shares = (tuple(sorted(config.bandwidth_shares.items()))
-                  if config.bandwidth_shares else None)
+                   config: ServingConfig,
+                   shares: dict[str, float] | None) -> tuple:
+        share_key = tuple(sorted(shares.items())) if shares else None
         return (tuple((st.name, n) for st, n in batch),
                 config.engine, config.qos, config.interleave,
                 config.latency_model, config.share_aware_stage1,
-                config.mmu_cap, config.max_batch_per_tenant, shares,
+                config.mmu_cap, config.max_batch_per_tenant, share_key,
                 config.vc_count, config.vc_arbitration)
 
     def _serve_batch(self, batch: list[tuple[TenantStream, int]],
-                     config: ServingConfig
+                     config: ServingConfig,
+                     shares: dict[str, float] | None
                      ) -> tuple[CompileResult, SimReport, bool]:
         """Compile + simulate one dispatch round.  Request k of tenant T
         becomes merged tenant ``T#k`` (all released at round start, so
         the compiled schedule and its simulation are reusable verbatim
-        whenever the same batch shape recurs)."""
-        key = self._round_key(batch, config)
+        whenever the same batch shape recurs).  ``shares`` is the
+        round's *effective* tenant share vector —
+        ``config.bandwidth_shares`` for a static run, the adaptive
+        policy's current vector otherwise — and is part of the cache
+        key, so an adaptive run only pays a fresh compile per distinct
+        (batch shape, share vector) pair (the policy's quantum grid
+        keeps that set finite)."""
+        key = self._round_key(batch, config, shares)
         hit = key in self._cache
         if hit:
             self.cache_hits += 1
@@ -489,18 +535,17 @@ class ServingSimulator:
         mt = MultiTenantWorkload(
             "serving_batch", mmu_cap=config.mmu_cap,
             interleave=config.interleave or "none")
-        shares: dict[str, float] = {}
+        slot_shares: dict[str, float] = {}
         for st, n in batch:
             for k in range(n):
                 slot = f"{st.name}{SLOT_SEP}{k}"
                 mt.add_tenant(slot, st.graph, priority=st.priority)
-                if config.bandwidth_shares and st.name in \
-                        config.bandwidth_shares:
+                if shares and st.name in shares:
                     # the tenant's guarantee splits across its in-flight
                     # requests: k concurrent instances each defend 1/k
-                    shares[slot] = config.bandwidth_shares[st.name] / n
-        if shares:
-            mt.bandwidth_shares = shares
+                    slot_shares[slot] = shares[st.name] / n
+        if slot_shares:
+            mt.bandwidth_shares = slot_shares
         res = self._compiler.compile(mt, CompileOptions(
             engine=config.engine, qos=config.qos,
             latency_model=config.latency_model,
@@ -595,6 +640,16 @@ class ServingSimulator:
         records: list[RequestRecord] = []
         rounds: list[DispatchRound] = []
         hits0, misses0 = self.cache_hits, self.cache_misses
+        pol = config.policy
+        reweights: list = []
+        # the effective share vector rounds dispatch under: the static
+        # config shares, or (with a policy) the policy's live vector
+        # seeded from the resolved tenant shares
+        if pol is not None:
+            cur_shares: dict[str, float] | None = pol.start(
+                _resolve_stream_shares(streams, config))
+        else:
+            cur_shares = config.bandwidth_shares
 
         def admit(req: Request) -> None:
             s = stats[req.tenant]
@@ -632,7 +687,7 @@ class ServingSimulator:
             batch = [(st, min(len(queues[st.name]),
                               config.max_batch_per_tenant))
                      for st in streams if queues[st.name]]
-            res, rep, hit = self._serve_batch(batch, config)
+            res, rep, hit = self._serve_batch(batch, config, cur_shares)
             served: list[tuple[str, int]] = []
             slot = 0
             for st, n in batch:
@@ -650,9 +705,43 @@ class ServingSimulator:
                     served.append((rec.tenant, rec.seq))
                     slot += 1
                 s.busy_s += rep.makespan_s
-            rounds.append(DispatchRound(t, rep.makespan_s, tuple(served),
-                                        hit))
+            rounds.append(DispatchRound(
+                t, rep.makespan_s, tuple(served), hit,
+                shares=(tuple((st.name, cur_shares[st.name])
+                              for st in streams)
+                        if pol is not None else None)))
             t += rep.makespan_s
+            if pol is not None:
+                # feed the policy this round's telemetry at the round
+                # boundary; arrivals during the round are admitted
+                # first so queue depths reflect the live backlog (the
+                # loop top would admit the same requests identically)
+                while ai < n_arrivals and arrivals[ai].arrival_s <= t:
+                    admit(arrivals[ai])
+                    ai += 1
+                agg = {st.name: [0.0, 0.0, 0.0, 0] for st in streams}
+                slot = 0
+                for st, n in batch:
+                    for _ in range(n):
+                        tstat = rep.tenant_stats[slot]
+                        row = agg[st.name]
+                        row[0] += tstat.miu_wait_s
+                        row[1] += tstat.miu_bytes
+                        row[2] += tstat.expected_bytes
+                        row[3] += 1
+                        slot += 1
+                dec = pol.observe(t, [TenantTelemetry(
+                    tenant=st.name,
+                    queue_depth=len(queues[st.name]),
+                    miu_wait_s=agg[st.name][0],
+                    satisfaction=(agg[st.name][1] / agg[st.name][2]
+                                  if agg[st.name][2] > 0 else 1.0),
+                    served=agg[st.name][3],
+                    span_s=rep.makespan_s,
+                    slo_s=st.slo_s) for st in streams])
+                if dec is not None:
+                    reweights.append(dec)
+                    cur_shares = dict(dec.shares)
         # wind-down: arrivals after the stop point still pass admission
         # (the queue no longer drains), keeping the conservation
         # invariant exact for drain=False runs
@@ -665,7 +754,8 @@ class ServingSimulator:
             stats=stats, requests=records, rounds=rounds,
             arrivals=arrivals, end_s=t,
             compile_cache_hits=self.cache_hits - hits0,
-            compile_cache_misses=self.cache_misses - misses0)
+            compile_cache_misses=self.cache_misses - misses0,
+            reweights=reweights)
 
 
 def _resolve_stream_shares(streams: list[TenantStream],
@@ -741,25 +831,36 @@ class DynamicDispatcher:
         self.by_name = {st.name: st for st in streams}
         vc = max(config.vc_count, 1)
         self.chan_of = {st.name: i % vc for i, st in enumerate(streams)}
+        self.policy = config.policy
         shares = _resolve_stream_shares(streams, config)
-        weights: dict[int, float] = {}
-        for st in streams:
-            c = self.chan_of[st.name]
-            weights[c] = weights.get(c, 0.0) + shares[st.name]
+        if self.policy is not None:
+            shares = self.policy.start(shares)
+        self.shares = shares
         self.sim = IncrementalSimulator(
             owner.platform, arbitration=config.vc_arbitration,
-            channel_weights=weights)
+            channel_weights=self._pool_weights(shares))
         self.events: list[DispatchEvent] = []
+        self.reweights: list = []
+
+    def _pool_weights(self, shares: dict[str, float]) -> dict[int, float]:
+        """Per-virtual-channel wfq weights: each channel pools the
+        resolved shares of the tenants riding it."""
+        weights: dict[int, float] = {}
+        for st in self.streams:
+            c = self.chan_of[st.name]
+            weights[c] = weights.get(c, 0.0) + shares[st.name]
+        return weights
 
     # ------------------------------------------------------------- snapshots
-    def _snap(self, t: float, kind: str, tenant: str, seq: int) -> None:
+    def _snap(self, t: float, kind: str, tenant: str, seq: int,
+              shares: tuple[tuple[str, float], ...] | None = None) -> None:
         queued = tuple((r.tenant, r.seq) for st in self.streams
                        for r in self._queues[st.name])
         inflight = tuple((r.tenant, r.seq)
                          for _, r in sorted(self._inflight.items()))
         self.events.append(DispatchEvent(
             t, kind, tenant, seq, queued, inflight,
-            self._executed, self._rejected))
+            self._executed, self._rejected, shares))
 
     # ------------------------------------------------------------- the loop
     def run(self) -> ServingResult:
@@ -789,6 +890,11 @@ class DynamicDispatcher:
         inf = float("inf")
         ai, n_arr = 0, len(arrivals)
         t_end = 0.0
+        pol = self.policy
+        # per-tenant MIU-wait snapshots: the policy sees the *window*
+        # since its last observation, not the cumulative total
+        last_obs_t = 0.0
+        wait0 = {st.name: 0.0 for st in streams}
 
         def admit(req: Request, t: float) -> None:
             s = stats[req.tenant]
@@ -870,6 +976,30 @@ class DynamicDispatcher:
                     rec.dispatch_s, fin - rec.dispatch_s,
                     ((rec.tenant, rec.seq),), hit_of[pid]))
                 self._snap(fin, "complete", rec.tenant, rec.seq)
+                if pol is not None:
+                    # completion events are the preemptive analogue of
+                    # round boundaries: observe, then re-weight the
+                    # channel arbitration before the next dispatch —
+                    # weights are read at each MIU grant, so the change
+                    # takes effect deterministically from ``fin`` on
+                    dec = pol.observe(fin, [TenantTelemetry(
+                        tenant=st.name,
+                        queue_depth=len(queues[st.name]),
+                        miu_wait_s=(stats[st.name].miu_wait_s
+                                    - wait0[st.name]),
+                        served=stats[st.name].served,
+                        span_s=max(fin - last_obs_t, 0.0),
+                        slo_s=st.slo_s)
+                        for st in streams])
+                    last_obs_t = fin
+                    for st in streams:
+                        wait0[st.name] = stats[st.name].miu_wait_s
+                    if dec is not None:
+                        self.reweights.append(dec)
+                        sim.set_channel_weights(
+                            self._pool_weights(dict(dec.shares)))
+                        self._snap(fin, "reweight", rec.tenant, rec.seq,
+                                   shares=dec.shares)
                 try_dispatch(rec.tenant, fin)
             else:
                 admit(arrivals[ai], next_arr)
@@ -883,7 +1013,8 @@ class DynamicDispatcher:
             arrivals=arrivals, end_s=t_end,
             compile_cache_hits=self.owner.cache_hits - hits0,
             compile_cache_misses=self.owner.cache_misses - misses0,
-            dispatch="preemptive", events=self.events, dispatcher=self)
+            dispatch="preemptive", events=self.events, dispatcher=self,
+            reweights=self.reweights)
 
 
 def serve(streams: list[TenantStream],

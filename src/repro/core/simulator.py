@@ -125,6 +125,31 @@ class TenantSimStats:
         return self.miu_bytes / self.expected_bytes
 
 
+@dataclass(frozen=True)
+class TenantTelemetry:
+    """One tenant's observed execution signals over one window — the
+    currency between a producer (a round's ``SimReport``, the
+    incremental simulator's per-program accounting, the serving loop's
+    queue depths) and a telemetry consumer such as
+    ``tuning.AdaptiveSharePolicy.observe``.
+
+    ``span_s`` is the window the wait accumulated over (a round's
+    makespan, a completion-to-completion gap); ``satisfaction`` is the
+    window's ``guaranteed_share_satisfaction`` (1.0 when no entitlement
+    was tracked); ``slo_s`` is the tenant's end-to-end latency target
+    when it has one — consumers use it to weight pressure by urgency
+    (a queued request of a 0.6 ms-SLO tenant outranks one of a 3 ms-SLO
+    tenant)."""
+
+    tenant: str
+    queue_depth: int = 0
+    miu_wait_s: float = 0.0
+    satisfaction: float = 1.0
+    served: int = 0
+    span_s: float = 0.0
+    slo_s: float | None = None
+
+
 @dataclass
 class SimReport:
     makespan_s: float
@@ -138,6 +163,17 @@ class SimReport:
         if self.makespan_s <= 0:
             return 0.0
         return self.unit_busy_s.get(unit, 0.0) / self.makespan_s
+
+    def miu_wait_by_tenant(self) -> dict[int, float]:
+        """Tenant index -> MIU wait behind other tenants (telemetry
+        accessor for the adaptive-policy loop)."""
+        return {ti: s.miu_wait_s for ti, s in self.tenant_stats.items()}
+
+    def satisfaction_by_tenant(self) -> dict[int, float]:
+        """Tenant index -> guaranteed-share satisfaction (1.0 when no
+        entitlement was tracked, e.g. vc_count=1)."""
+        return {ti: s.guaranteed_share_satisfaction
+                for ti, s in self.tenant_stats.items()}
 
 
 def _duration(i: int, result: CodegenResult,
@@ -729,6 +765,29 @@ class IncrementalSimulator:
         self.log: list[tuple[int, int, float, float]] = []
         self._max_start = 0.0
         self._pending = 0            # uncommitted instructions
+
+    # ------------------------------------------------------------- telemetry
+    def set_channel_weights(self, weights: dict[int, float]) -> None:
+        """Replace the wfq/priority channel weights.  Weights are read
+        at every MIU grant (never cached), so a caller reacting to an
+        ``advance`` gate — e.g. an adaptive share policy at a program
+        completion — re-weights the arbitration deterministically from
+        that simulated instant on; committed grants are untouched."""
+        for c, w in weights.items():
+            if w <= 0.0:
+                raise ValueError(
+                    f"channel {c} weight must be > 0, got {w}")
+        self.channel_weights = dict(weights)
+
+    def program_telemetry(self, pid: int) -> TenantTelemetry:
+        """The accumulated wait/byte signals of one admitted program,
+        as a :class:`TenantTelemetry` row (tenant = the program id as a
+        string; callers re-key by their own tenant names)."""
+        prog = self.programs[pid]
+        return TenantTelemetry(
+            tenant=str(pid), miu_wait_s=prog.miu_wait_s,
+            served=int(prog.committed == prog.n),
+            span_s=max(0.0, self._max_start - prog.release_s))
 
     # ------------------------------------------------------------- admission
     def add_program(self, result: CodegenResult, release_s: float,

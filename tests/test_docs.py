@@ -6,10 +6,12 @@ engine, arbitration policy, QoS knob, and QoS accounting field (plus
 the benchmark's documented CLI flags must actually exist), and
 docs/PERF_MODEL.md must track the latency-pricing stack (every pricing
 function, bound symbol, and ``latency_model`` value it names must
-exist).  Every ``symbol (file.py:line)`` pointer in the docs must
+exist), and docs/TUNING.md must track the tuning layer (every
+``KnobSpace`` axis, every ``AdaptiveSharePolicy`` field, every
+objective).  Every ``symbol (file.py:line)`` pointer in the docs must
 resolve to the symbol it claims to point at.  This is what keeps the
 docs from rotting silently when the ISA, the pipeline, the perf model,
-or the scheduling/QoS contract changes."""
+the scheduling/QoS contract, or the tuning loop changes."""
 
 import dataclasses
 import inspect
@@ -35,7 +37,11 @@ from repro.core import serving as serving_mod
 from repro.core.serving import (ADMISSION_POLICIES, DISPATCH_MODES,
                                 DispatchEvent, RequestRecord, ServingConfig,
                                 ServingStats, TenantStream)
-from repro.core.simulator import TenantSimStats
+from repro.core.simulator import TenantSimStats, TenantTelemetry
+from repro.core import tuning as tuning_mod
+from repro.core.tuning import (TUNE_OBJECTIVES, AdaptiveSharePolicy,
+                               KnobConfig, KnobSpace, ShareDecision,
+                               TuneResult, TuneTrial)
 
 pytestmark = pytest.mark.docs
 
@@ -46,6 +52,7 @@ ARCH_MD = DOCS / "ARCHITECTURE.md"
 SCHED_MD = DOCS / "SCHEDULING.md"
 PERF_MD = DOCS / "PERF_MODEL.md"
 SERVING_MD = DOCS / "SERVING.md"
+TUNING_MD = DOCS / "TUNING.md"
 CORE = REPO / "src" / "repro" / "core"
 
 
@@ -400,6 +407,123 @@ def test_architecture_md_mentions_serving_layer():
             "reference")
 
 
+# ---------------------------------------------------- TUNING.md sync checks
+
+@pytest.fixture(scope="module")
+def tuning_tokens() -> set[str]:
+    assert TUNING_MD.is_file(), "docs/TUNING.md is missing"
+    return _code_spans(TUNING_MD.read_text())
+
+
+def test_tuning_md_documents_every_knobspace_axis(tuning_tokens):
+    """The §1 knob catalog must carry one row per searchable axis —
+    a knob added to KnobSpace without a catalog row fails here."""
+    axes = {f.name for f in dataclasses.fields(KnobSpace)}
+    missing = axes - tuning_tokens
+    assert not missing, (f"KnobSpace axes missing from "
+                         f"docs/TUNING.md: {missing}")
+
+
+def test_tuning_md_documents_every_policy_field(tuning_tokens):
+    """Every public AdaptiveSharePolicy knob must appear in the rule
+    spec (§3) — the hysteresis/clamp invariant table plus the pressure
+    weights."""
+    fields = {f.name for f in dataclasses.fields(AdaptiveSharePolicy)
+              if not f.name.startswith("_")}
+    missing = fields - tuning_tokens
+    assert not missing, (f"AdaptiveSharePolicy fields missing from "
+                         f"docs/TUNING.md: {missing}")
+
+
+def test_tuning_md_documents_every_objective(tuning_tokens):
+    missing = set(TUNE_OBJECTIVES) - tuning_tokens
+    assert not missing, (f"tune objectives missing from "
+                         f"docs/TUNING.md: {missing}")
+    assert "TUNE_OBJECTIVES" in tuning_tokens, (
+        "docs/TUNING.md must name TUNE_OBJECTIVES next to the "
+        "objective list")
+
+
+def test_tuning_md_documents_the_tuner_surface(tuning_tokens):
+    """The walkthrough must name the machinery it describes on both
+    sides of the loop: search types, policy types, telemetry unit."""
+    needed = {"KnobSpace", "KnobConfig", "autotune", "TuneResult",
+              "TuneTrial", "AdaptiveSharePolicy", "ShareDecision",
+              "TenantTelemetry", "step_trace", "reweights"}
+    missing = needed - tuning_tokens
+    assert not missing, (f"tuning surface missing from "
+                         f"docs/TUNING.md: {missing}")
+
+
+def test_tuning_md_names_only_real_symbols(tuning_tokens):
+    """Ghost-symbol check: every tuning-flavored token the doc
+    backticks must exist in the tuning module, its dataclasses, or the
+    benchmarks that emit the rows — catches renames and deletions."""
+    names: set[str] = set(dir(tuning_mod)) | set(dir(core_pkg))
+    for cls in (KnobSpace, KnobConfig, TuneResult, TuneTrial,
+                ShareDecision, AdaptiveSharePolicy, TenantTelemetry,
+                ServingConfig):
+        names |= {f.name for f in dataclasses.fields(cls)}
+    names |= set(inspect.signature(tuning_mod.autotune).parameters)
+    symbol_like = {
+        t for t in tuning_tokens
+        if t.startswith(("Knob", "Tune", "TUNE", "Adaptive", "Share",
+                         "SHIFT"))
+        or t in {"autotune", "step_trace", "autotune_rows",
+                 "shifting_mix", "objective_tenant", "trials",
+                 "best_so_far", "smoothing"}}
+    bench_src = "\n".join(
+        (REPO / "benchmarks" / b).read_text()
+        for b in ("bench_multi_tenant.py", "bench_serving.py"))
+    ghosts = {t for t in symbol_like - names
+              if not re.search(rf"\b{re.escape(t)}\b", bench_src)}
+    assert not ghosts, (f"docs/TUNING.md names nonexistent "
+                        f"symbols: {ghosts}")
+
+
+def test_serving_md_cross_references_tuning(serving_tokens):
+    """SERVING.md's policy knob row and §6 must point at TUNING.md
+    (the knob's reference page), and both pages must agree on the
+    policy type's name."""
+    text = SERVING_MD.read_text()
+    assert "TUNING.md" in text, (
+        "docs/SERVING.md lost its TUNING.md cross-reference")
+    assert "AdaptiveSharePolicy" in serving_tokens
+
+
+def test_bench_artifact_has_tuning_rows():
+    """The committed artifact carries both tuning acceptance rows: the
+    autotune rows recover (or beat) the hand-picked config within
+    budget, and the shifting-mix adaptive run beats every static share
+    split on the worst surger's p99."""
+    import json
+
+    data = json.loads((REPO / "BENCH_multi_tenant.json").read_text())
+    tuned = {s: rows["autotune"] for s, rows in data.items()
+             if isinstance(rows, dict) and "autotune" in rows}
+    assert tuned, ("no autotune rows in BENCH_multi_tenant.json — "
+                   "regenerate the full artifact")
+    for scenario, row in tuned.items():
+        assert row["evaluations"] <= row["budget"], (
+            f"{scenario}: autotune overspent its budget")
+        assert row["recovery_ratio"] >= 1.0, (
+            f"{scenario}: autotune lost to the hand-picked config "
+            "(structurally impossible when seeded at it)")
+        assert row["best_sim_s"] <= row["hand_picked_sim_s"] + 1e-15
+    mix = data.get("shifting_mix")
+    assert mix, ("BENCH_multi_tenant.json lost its shifting_mix rows "
+                 "(the adaptive-policy acceptance metric)")
+    assert mix["adaptive_margin"] > 1.0, (
+        "adaptive policy no longer beats the best static share split")
+    adaptive = mix["variants"]["adaptive"]
+    assert adaptive["reweights"] > 0
+    statics = [v for k, v in mix["variants"].items()
+               if k.startswith("static_")]
+    assert statics, "shifting_mix lost its static-split baselines"
+    best_static = min(v["worst_surger_p99_s"] for v in statics)
+    assert adaptive["worst_surger_p99_s"] < best_static
+
+
 # ------------------------------------------- file:line pointer accuracy
 
 _PTR_ADJACENT = re.compile(
@@ -420,7 +544,8 @@ def _resolve_doc_path(path: str) -> Path | None:
 
 
 @pytest.mark.parametrize("doc", ["ARCHITECTURE.md", "SCHEDULING.md",
-                                 "PERF_MODEL.md", "ISA.md", "SERVING.md"])
+                                 "PERF_MODEL.md", "ISA.md", "SERVING.md",
+                                 "TUNING.md"])
 def test_doc_file_line_pointers_resolve(doc):
     """Every `file.py:line` pointer must name an existing file and an
     in-range line; when a backticked symbol directly precedes the
@@ -552,6 +677,8 @@ def test_bench_artifact_seed_is_valid():
     data = json.loads(bench_json.read_text())
     assert data, "bench artifact is empty"
     for scenario, rows in data.items():
+        if scenario == "shifting_mix":
+            continue          # bench_serving's policy rows, no vc_sweep
         sweep = rows.get("vc_sweep")
         assert sweep, f"{scenario}: vc_sweep rows missing"
         for key in ("sched_s", "aware_sched_s", "oversub_sched_s",

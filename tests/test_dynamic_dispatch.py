@@ -92,6 +92,12 @@ def _assert_state_machine(res):
             rejected += 1
         elif ev.kind == "complete":
             executed.add(key)
+        elif ev.kind == "reweight":
+            # adaptive-policy share change: the request partition is
+            # untouched, but the event must carry the accepted vector
+            assert ev.shares is not None, ev
+            assert all(s > 0 for _, s in ev.shares), ev
+            assert sum(s for _, s in ev.shares) <= 1 + 1e-9, ev
         else:
             assert ev.kind == "dispatch", ev
         queued, inflight = set(ev.queued), set(ev.inflight)

@@ -1,0 +1,392 @@
+"""Auto-tuner and adaptive-share-policy test suite.
+
+Locks the tuning-loop contracts documented in docs/TUNING.md:
+autotune's seeded reproducibility and monotone best-so-far trace, the
+adaptive policy's clamp/quantum/conservation invariants and its
+hysteresis freeze on constant workloads, policy honoring under both
+dispatch modes, and the shifting-mix regression — the adaptive run
+Pareto-dominates every hand-picked static share split on the
+anti-correlated-surge scenario (the PR-9 headline)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (AdaptiveSharePolicy, CompileOptions, DoraCompiler,
+                        DoraPlatform, KnobConfig, KnobSpace,
+                        MultiTenantWorkload, Policy, ServingConfig,
+                        ServingSimulator, TenantStream, TenantTelemetry,
+                        autotune, mlp_graph, step_trace)
+from repro.configs import paper_models
+
+PLAT = DoraPlatform.vck190()
+
+# tiny distinct models keep the autotune trials offline-fast
+TINY_A = mlp_graph("tiny_a", 16, [64, 64, 64])
+TINY_B = mlp_graph("tiny_b", 32, [128, 64])
+
+# a small space keeps coordinate descent's full cycle within budget
+SMALL_SPACE = KnobSpace(vc_count=(1, 2), vc_arbitration=("fifo", "wfq"),
+                        interleave=("none", "rr"),
+                        share_aware_stage1=(False,),
+                        latency_model=("analytic",))
+
+
+def _workload() -> MultiTenantWorkload:
+    mt = MultiTenantWorkload("tune_pair")
+    mt.add_tenant("a", TINY_A)
+    mt.add_tenant("b", TINY_B)
+    return mt
+
+
+def _streams(rps=4000.0):
+    return [TenantStream("a", TINY_A, rps=rps),
+            TenantStream("b", TINY_B, rps=rps)]
+
+
+# ------------------------------------------------------------- knob space
+
+def test_knob_space_size_counts_every_axis():
+    assert SMALL_SPACE.size == 2 * 2 * 2  # vc_count x arbitration x ilv
+    assert KnobSpace().size == 3 * 3 * 3 * 2 * 2
+
+
+def test_knob_space_validation_rejects_bad_axes():
+    with pytest.raises(ValueError, match="empty"):
+        KnobSpace(vc_count=()).validate()
+    with pytest.raises(ValueError, match="repeats"):
+        KnobSpace(vc_count=(2, 2)).validate()
+    with pytest.raises(ValueError, match="illegal"):
+        KnobSpace(vc_arbitration=("lifo",)).validate()
+    with pytest.raises(ValueError, match=">= 1"):
+        KnobSpace(vc_count=(0,)).validate()
+    with pytest.raises(ValueError, match="<= 0"):
+        KnobSpace(share_split=((0.5, -0.1),)).validate()
+    with pytest.raises(ValueError, match="> 1"):
+        KnobSpace(share_split=((0.8, 0.7),)).validate()
+    with pytest.raises(ValueError, match="the target has 2"):
+        KnobSpace(share_split=((0.5, 0.3, 0.2),)).validate(n_tenants=2)
+
+
+def test_knob_config_projections():
+    k = KnobConfig(vc_count=4, vc_arbitration="wfq",
+                   share_split=(0.7, 0.3), interleave="rr",
+                   share_aware_stage1=True, dispatch="preemptive")
+    assert k.shares_for(["a", "b"]) == {"a": 0.7, "b": 0.3}
+    opts = k.compile_options()
+    assert opts.share_aware_stage1 is True and opts.qos == "wfq"
+    cfg = k.serving_config(["a", "b"], ServingConfig(horizon_s=0.01,
+                                                     seed=7))
+    assert cfg.horizon_s == 0.01 and cfg.seed == 7          # base kept
+    assert cfg.vc_count == 4 and cfg.dispatch == "preemptive"
+    assert cfg.bandwidth_shares == {"a": 0.7, "b": 0.3}
+    with pytest.raises(ValueError, match="names 2 tenants"):
+        k.shares_for(["a", "b", "c"])
+
+
+# --------------------------------------------------------------- autotune
+
+def test_autotune_static_reproducible_and_monotone():
+    res1 = autotune(_workload(), budget=6, space=SMALL_SPACE, seed=3)
+    res2 = autotune(_workload(), budget=6, space=SMALL_SPACE, seed=3)
+    assert [(t.knobs, t.objective_s) for t in res1.trials] == \
+        [(t.knobs, t.objective_s) for t in res2.trials]
+    assert res1.best == res2.best
+    # best_so_far never regresses, and the winner is its minimum
+    bests = [t.best_so_far for t in res1.trials]
+    assert bests == sorted(bests, reverse=True)
+    assert res1.best_objective_s == bests[-1]
+    assert res1.evaluations <= res1.budget
+
+
+def test_autotune_static_beats_or_ties_default_knobs():
+    res = autotune(_workload(), budget=8, space=SMALL_SPACE, seed=0)
+    default_score = res.trials[0].objective_s  # descent starts at default
+    assert res.trials[0].knobs == SMALL_SPACE.default()
+    assert res.best_objective_s <= default_score
+
+
+def test_autotune_budget_caps_unique_evaluations():
+    res = autotune(_workload(), budget=2, space=SMALL_SPACE, seed=0)
+    assert res.evaluations == 2
+    assert sum(1 for t in res.trials if not t.cached) == 2
+
+
+def test_autotune_exhausts_tiny_space_without_spinning():
+    space = KnobSpace(vc_count=(1,), vc_arbitration=("fifo",),
+                      interleave=("none", "rr"),
+                      share_aware_stage1=(False,),
+                      latency_model=("analytic",))
+    res = autotune(_workload(), budget=25, space=space, seed=0)
+    assert res.evaluations == space.size == 2
+
+
+def test_autotune_serving_objective():
+    res = autotune(_streams(), budget=3, space=SMALL_SPACE, seed=1,
+                   base_config=ServingConfig(horizon_s=0.004, seed=9))
+    assert res.objective == "p99"
+    assert math.isfinite(res.best_objective_s)
+    cfg = res.serving_config(["a", "b"])
+    assert cfg.vc_count == res.best.vc_count
+
+
+def test_autotune_objective_target_mismatch():
+    with pytest.raises(ValueError, match="needs a static"):
+        autotune(_streams(), budget=1, objective="makespan")
+    with pytest.raises(ValueError, match="needs TenantStream"):
+        autotune(_workload(), budget=1, objective="p99")
+    with pytest.raises(ValueError, match="unknown objective"):
+        autotune(_workload(), budget=1, objective="latency")
+    with pytest.raises(ValueError, match="budget"):
+        autotune(_workload(), budget=0)
+    with pytest.raises(ValueError, match="objective_tenant"):
+        autotune(_streams(), budget=1, objective_tenant="ghost")
+
+
+# ----------------------------------------------------- adaptive invariants
+
+def _tele(name, queue=0, wait=0.0, span=1.0, sat=1.0, slo=None):
+    return TenantTelemetry(tenant=name, queue_depth=queue, miu_wait_s=wait,
+                           satisfaction=sat, span_s=span, slo_s=slo)
+
+
+def _assert_valid(pol, shares, total):
+    q = pol.quantum
+    assert sum(shares.values()) == pytest.approx(total, abs=1e-9)
+    for s in shares.values():
+        assert pol.min_share - 1e-9 <= s <= pol.max_share + 1e-9
+        assert abs(s / q - round(s / q)) < 1e-6  # on the quantum grid
+
+
+def test_policy_clamps_quantum_and_conservation():
+    pol = AdaptiveSharePolicy()
+    shares = pol.start({"a": 0.5, "b": 0.3, "c": 0.2})
+    _assert_valid(pol, shares, 1.0)
+    # slam one tenant with extreme pressure for many windows: the
+    # others must stop at min_share, the total must never drift
+    for i in range(30):
+        dec = pol.observe(float(i), [_tele("a", queue=50),
+                                     _tele("b"), _tele("c")])
+        if dec is not None:
+            _assert_valid(pol, dict(dec.shares), 1.0)
+    final = pol.shares
+    # hysteresis may park up to `deadband` short of the clamp
+    assert final["a"] >= pol.max_share - pol.deadband - 1e-9
+    assert final["b"] >= pol.min_share - 1e-9
+    assert final["c"] >= pol.min_share - 1e-9
+
+
+def test_policy_converges_and_freezes_on_constant_workload():
+    pol = AdaptiveSharePolicy()
+    pol.start({"a": 0.5, "b": 0.5})
+    tele = [_tele("a", queue=6), _tele("b", queue=2)]
+    decisions = [pol.observe(float(i), tele) for i in range(40)]
+    moved = [d for d in decisions if d is not None]
+    assert moved, "constant imbalance must move shares at least once"
+    # hysteresis: after convergence the tail of the run is all-None
+    tail = decisions[-10:]
+    assert all(d is None for d in tail), "shares must freeze, not oscillate"
+    frozen = pol.shares
+    assert frozen["a"] > frozen["b"]
+
+
+def test_policy_step_caps_per_window_movement():
+    pol = AdaptiveSharePolicy(step=0.1)
+    start = pol.start({"a": 0.5, "b": 0.5})
+    dec = pol.observe(0.0, [_tele("a", queue=50), _tele("b")])
+    assert dec is not None
+    for name, s in dec.shares:
+        assert abs(s - start[name]) <= pol.step + pol.quantum + 1e-9
+
+
+def test_policy_urgency_prefers_tight_slo_tenant():
+    """Equal queue depths: the tight-SLO tenant wins share; with
+    urgency disabled the tie holds and hysteresis keeps shares still."""
+    pol = AdaptiveSharePolicy()
+    pol.start({"tight": 0.5, "slack": 0.5})
+    tele = [_tele("tight", queue=6, slo=0.001),
+            _tele("slack", queue=6, slo=0.01)]
+    dec = None
+    for i in range(10):
+        dec = pol.observe(float(i), tele) or dec
+    assert dec is not None
+    assert pol.shares["tight"] > pol.shares["slack"]
+
+    flat = AdaptiveSharePolicy(urgency=0.0)
+    flat.start({"tight": 0.5, "slack": 0.5})
+    assert all(flat.observe(float(i), tele) is None for i in range(5))
+
+
+def test_policy_lifecycle_and_validation_errors():
+    pol = AdaptiveSharePolicy()
+    with pytest.raises(RuntimeError, match="before start"):
+        pol.observe(0.0, [_tele("a")])
+    with pytest.raises(ValueError, match="at least one"):
+        pol.start({})
+    with pytest.raises(ValueError, match="> 1"):
+        pol.start({"a": 0.8, "b": 0.8})
+    pol.start({"a": 0.5, "b": 0.5})
+    with pytest.raises(ValueError, match="missing tenants"):
+        pol.observe(0.0, [_tele("a")])
+    with pytest.raises(ValueError, match="min_share"):
+        AdaptiveSharePolicy(min_share=0.6, max_share=0.4)
+    with pytest.raises(ValueError, match="quantum"):
+        AdaptiveSharePolicy(quantum=0.2, min_share=0.1)
+    with pytest.raises(ValueError, match="deadband"):
+        AdaptiveSharePolicy(step=0.05, deadband=0.05)
+    with pytest.raises(ValueError, match="smoothing"):
+        AdaptiveSharePolicy(smoothing=0.0)
+    with pytest.raises(ValueError, match="urgency"):
+        AdaptiveSharePolicy(urgency=-1.0)
+
+
+def test_policy_start_resets_state():
+    pol = AdaptiveSharePolicy()
+    pol.start({"a": 0.5, "b": 0.5})
+    for i in range(5):
+        pol.observe(float(i), [_tele("a", queue=9), _tele("b")])
+    moved = dict(pol.shares)
+    assert moved["a"] > 0.5
+    again = pol.start({"a": 0.5, "b": 0.5})
+    assert again["a"] == pytest.approx(0.5)
+    assert again["b"] == pytest.approx(0.5)
+
+
+def test_serving_config_rejects_non_policy():
+    with pytest.raises(ValueError, match="policy"):
+        ServingConfig(policy=object())
+
+
+# ------------------------------------------- both dispatch modes honor it
+
+SIM = ServingSimulator(PLAT, Policy.dora())
+
+
+@pytest.mark.parametrize("dispatch", ["rounds", "preemptive"])
+def test_policy_honored_and_replayable(dispatch):
+    def run():
+        cfg = ServingConfig(horizon_s=0.01, seed=5, queue_capacity=6,
+                            dispatch=dispatch, vc_count=2,
+                            vc_arbitration="wfq",
+                            policy=AdaptiveSharePolicy())
+        return SIM.serve([TenantStream("a", TINY_A, rps=6000.0),
+                          TenantStream("b", TINY_B, rps=500.0)], cfg)
+
+    res = run()
+    assert res.reweights, f"{dispatch}: imbalanced load must re-weight"
+    for dec in res.reweights:
+        shares = dict(dec.shares)
+        assert sum(shares.values()) == pytest.approx(1.0, abs=1e-9)
+        assert all(s > 0 for s in shares.values())
+    # the hot tenant ends with more bandwidth than it started with
+    assert dict(res.reweights[-1].shares)["a"] > 0.5
+    if dispatch == "rounds":
+        assert any(r.shares is not None for r in res.rounds)
+    else:
+        marks = [e for e in res.events if e.kind == "reweight"]
+        assert len(marks) == len(res.reweights)
+    # one policy instance resets per run: the replay is bit-identical
+    res2 = run()
+    assert res.reweights == res2.reweights
+    for name in ("a", "b"):
+        assert res.stats[name].latencies_s == res2.stats[name].latencies_s
+
+
+def test_static_run_has_no_reweights():
+    cfg = ServingConfig(horizon_s=0.005, seed=5,
+                        bandwidth_shares={"a": 0.5, "b": 0.5})
+    res = SIM.serve(_streams(), cfg)
+    assert res.reweights == []
+    assert all(r.shares is None for r in res.rounds)
+
+
+# -------------------------------------------------- shifting-mix headline
+
+def test_step_trace_seeded_and_validated():
+    tr1 = step_trace(1000.0, 4000.0, 0.005, 0.01, seed=2, name="x")
+    tr2 = step_trace(1000.0, 4000.0, 0.005, 0.01, seed=2, name="x")
+    assert tr1 == tr2
+    assert all(0.0 <= t < 0.01 for t in tr1)
+    assert list(tr1) == sorted(tr1)
+    # the rate step is visible: more arrivals after step_s than before
+    assert sum(1 for t in tr1 if t >= 0.005) > sum(1 for t in tr1
+                                                   if t < 0.005)
+    with pytest.raises(ValueError, match="> 0"):
+        step_trace(0.0, 100.0, 0.0, 0.01)
+    with pytest.raises(ValueError, match="step_s"):
+        step_trace(100.0, 100.0, 0.02, 0.01)
+
+
+# the locked shifting-mix scenario (mirrored by bench_serving.py):
+# two latency-sensitive NCF-S tenants surge anti-correlated around a
+# constant BERT-S batch hog, preemptive dispatch
+SHIFT_HORIZON = 0.12
+SHIFT_SEED = 2026
+SHIFT_HI, SHIFT_LO = 2000.0, 150.0
+
+
+def _shift_streams():
+    comp = DoraCompiler(PLAT, Policy.dora())
+    solo = {}
+    for m in ("NCF-S", "BERT-S"):
+        res = comp.compile(paper_models.get(m), CompileOptions(engine="list"))
+        solo[m] = comp.simulate(res).makespan_s
+    early = step_trace(SHIFT_HI, SHIFT_LO, SHIFT_HORIZON / 2, SHIFT_HORIZON,
+                       seed=SHIFT_SEED, name="surge-early")
+    late = step_trace(SHIFT_LO, SHIFT_HI, SHIFT_HORIZON / 2, SHIFT_HORIZON,
+                      seed=SHIFT_SEED, name="surge-late")
+    ncf = paper_models.get("NCF-S")
+    return [TenantStream("surge-early", ncf, trace=early,
+                         slo_s=4 * solo["NCF-S"]),
+            TenantStream("surge-late", ncf, trace=late,
+                         slo_s=4 * solo["NCF-S"]),
+            TenantStream("batch", paper_models.get("BERT-S"), rps=800.0,
+                         slo_s=4 * solo["BERT-S"])]
+
+
+def _shift_run(sim, streams, shares, policy=None):
+    cfg = ServingConfig(horizon_s=SHIFT_HORIZON, seed=SHIFT_SEED,
+                        queue_capacity=8, max_batch_per_tenant=2,
+                        vc_count=4, vc_arbitration="wfq", interleave="rr",
+                        bandwidth_shares=shares, policy=policy,
+                        dispatch="preemptive")
+    return sim.serve(streams, cfg)
+
+
+def test_adaptive_pareto_dominates_static_splits_on_shifting_mix():
+    """The PR-9 headline, seeded and locked: on anti-correlated tenant
+    surges, the adaptive policy re-weights each surger past anything a
+    static split of their pooled share can give both — every tenant's
+    p99 is at least as good as under *every* hand-picked static split,
+    and the worst surger's p99 is strictly better."""
+    sim = ServingSimulator(PLAT, Policy.dora())
+    streams = _shift_streams()
+    static = {}
+    for sa in (0.1, 0.3, 0.5):
+        res = _shift_run(sim, streams, {"surge-early": sa,
+                                        "surge-late": round(0.6 - sa, 2),
+                                        "batch": 0.4})
+        static[sa] = {n: res.stats[n].p99_s for n in res.stats}
+        assert not res.reweights
+
+    ada = _shift_run(sim, streams,
+                     {"surge-early": 0.3, "surge-late": 0.3, "batch": 0.4},
+                     policy=AdaptiveSharePolicy())
+    assert ada.reweights, "the surge flip must trigger re-weights"
+    p99 = {n: ada.stats[n].p99_s for n in ada.stats}
+
+    surgers = ("surge-early", "surge-late")
+    worst_ada = max(p99[n] for n in surgers)
+    for sa, sp in static.items():
+        # weak Pareto dominance on every tenant, batch hog included
+        for n in p99:
+            assert p99[n] <= sp[n] + 1e-12, (
+                f"adaptive {n} p99 {p99[n]:.6g} worse than static "
+                f"A={sa} ({sp[n]:.6g})")
+        # strict win on the binding metric
+        assert worst_ada < max(sp[n] for n in surgers), (
+            f"adaptive worst-surger p99 {worst_ada:.6g} does not beat "
+            f"static A={sa}")
