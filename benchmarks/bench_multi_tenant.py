@@ -77,9 +77,30 @@ measured headline: pipeline pricing cuts solo qwen3-4b's sched-vs-sim
 ratio from ~1.55x to ~1x — the within-layer DRAM serialization the
 analytic max(compute, stream, dram) overlap assumption cannot see.
 
+The ``mesh`` rows answer the scale-out question: does placing the
+tenants on *specialized* PEs of a multi-PE ``DoraMesh`` (shared DRAM,
+weight-proportional bandwidth shares, stage-0 placement DSE) beat the
+joint single-PE schedule?  Per scenario, three machines of comparable
+area run the same workload: the single vck190 PE (area 532), a
+homogeneous mesh of two "balanced" half-tiles (2 x 304), and a
+heterogeneous compute+memory mesh (332 + 264), all behind the same
+25.6 GB/s aggregate DRAM.  After a first equal-share compile, each
+mesh's PE weights are rebalanced proportional to the solo-simulated
+demand of the tenants placed on them (the fluid-fair split — an equal
+split prices the heavier tenant at bandwidth it cannot use elsewhere),
+and the recompiled mesh is simulated per PE with
+``simulate_mesh``.  ``hetero_win`` is single-PE over hetero-mesh
+simulated makespan (> 1: specialization + private MIU streams beat one
+big PE; ~1 on DRAM-bound pairs where any split of the shared port can
+at best tie the serialized single stream); ``specialization_win`` is
+homogeneous over heterogeneous.
+
 Usage: PYTHONPATH=src python benchmarks/bench_multi_tenant.py
        PYTHONPATH=src python benchmarks/bench_multi_tenant.py --vc 4
        PYTHONPATH=src python benchmarks/bench_multi_tenant.py --qos
+       PYTHONPATH=src python benchmarks/bench_multi_tenant.py --mesh
+       PYTHONPATH=src python benchmarks/bench_multi_tenant.py \
+           --mesh --mesh-pe compute,memory
        PYTHONPATH=src python benchmarks/bench_multi_tenant.py \
            --scenario small_pair --json BENCH_multi_tenant.json
    or: PYTHONPATH=src python -m benchmarks.run multi_tenant
@@ -90,9 +111,10 @@ from __future__ import annotations
 import json
 import time
 
-from repro.core import (LATENCY_MODELS, CompileOptions, DoraCompiler,
+from repro.core import (LATENCY_MODELS, ArchTemplate, CompileOptions,
+                        DoraCompiler, DoraMesh, DoraMeshCompiler,
                         DoraPlatform, KnobConfig, KnobSpace,
-                        MultiTenantWorkload, Policy, autotune,
+                        MultiTenantWorkload, PESpec, Policy, autotune,
                         build_candidate_table, candidate_memo_stats,
                         clear_candidate_memo, enumerate_layer_candidates_scalar,
                         interleave_aware_bound, interleave_stream,
@@ -582,8 +604,123 @@ def qos_sweep(scenario: str = "small_trio",
     return out
 
 
+# named PE templates for the mesh comparison (areas via
+# ArchTemplate.resource_cost: vck190=532, balanced=304, compute=332,
+# memory=264 — the two mesh variants stay within ~15% of the single PE)
+PE_TEMPLATES = {
+    "vck190": ArchTemplate(),            # the paper's 6/14/3 single PE
+    "balanced": ArchTemplate(3, 11, 2),  # homogeneous-mesh half tile
+    "compute": ArchTemplate(4, 8, 1),    # MMU-heavy: GEMM-bound tenants
+    "memory": ArchTemplate(2, 14, 2),    # LMU/SFU-rich: streaming tenants
+}
+MESH_PES = ("compute", "memory")
+
+
+def mesh_pe_templates(names) -> list[ArchTemplate]:
+    """The named PE templates, in order.  Unknown names raise a
+    ValueError listing the valid choices (same contract as
+    ``scenario_graphs``) — the ``--mesh-pe`` flag and every programmatic
+    caller share this guard."""
+    unknown = [n for n in names if n not in PE_TEMPLATES]
+    if unknown:
+        raise ValueError(
+            f"unknown PE template(s) {', '.join(map(repr, unknown))}; "
+            f"valid choices: {', '.join(sorted(PE_TEMPLATES))}")
+    return [PE_TEMPLATES[n] for n in names]
+
+
+def _mesh_variant(mt, mesh: DoraMesh, solo_sim: dict) -> tuple:
+    """(MeshCompileResult, MeshSimReport) for one mesh, with a
+    demand-weighted share rebalance: after an equal-weight first
+    compile, PE weights are set proportional to the solo-simulated
+    demand of the tenants placed on each PE and the mesh recompiled.
+    On DRAM-bound pairs the equal split prices the heavier tenant at
+    half the bandwidth it needs (the mesh then *loses* to single-PE
+    serialization); the demand split recovers the fluid-fair tie."""
+    opts = CompileOptions(engine="list")
+    mc = DoraMeshCompiler(mesh, Policy.dora())
+    res = mc.compile(mt, opts)
+    loads = {p: sum(solo_sim[mt.tenants[ti].name] for ti in tis)
+             for p, tis in res.placement.pe_tenants().items()}
+    total = sum(loads.values())
+    if total > 0 and len(loads) > 1:
+        weighted = DoraMesh(
+            mesh.name,
+            tuple(PESpec(pe.name, pe.platform,
+                         weight=max(loads.get(p, 0.0) / total, 1e-6))
+                  for p, pe in enumerate(mesh.pes)),
+            dram_bw_bytes=mesh.dram_bw_bytes)
+        mc = DoraMeshCompiler(weighted, Policy.dora())
+        res = mc.compile(mt, opts)
+    return res, mc.simulate(res)
+
+
+def mesh_cmp(scenario: str, pe_names: tuple[str, ...] = MESH_PES) -> dict:
+    """Joint single-PE vs homogeneous vs heterogeneous mesh on one
+    scenario (three machines of comparable area, same shared DRAM
+    aggregate).  ``*_sim_s`` keys gate in CI like every makespan;
+    ``hetero_win`` (single over hetero, higher is better) gates as a
+    ratio in ``compare_bench._TIME_HIGHER_BETTER``."""
+    graphs = scenario_graphs(scenario)
+    _, solo_sim = _solo_baseline(scenario, graphs)
+    mt, joint = _joint_compile(scenario)
+    comp = DoraCompiler(PLAT, Policy.dora())
+    single_sim = comp.simulate(joint).makespan_s
+
+    homog = DoraMesh.from_templates(
+        [PE_TEMPLATES["balanced"]] * max(len(pe_names), 2),
+        name=f"{scenario}-homog")
+    hetero = DoraMesh.from_templates(mesh_pe_templates(pe_names),
+                                     names=pe_names,
+                                     name=f"{scenario}-hetero")
+    row = {
+        "single_sched_s": joint.makespan_s,
+        "single_sim_s": single_sim,
+    }
+    for label, mesh in (("homog", homog), ("hetero", hetero)):
+        res, rep = _mesh_variant(mt, mesh, solo_sim)
+        pe_of = res.pe_of_tenant()
+        row[f"{label}_sched_s"] = res.makespan_s
+        row[f"{label}_sim_s"] = rep.makespan_s
+        row[label] = {
+            "pe_names": [pe.name for pe in res.mesh.pes],
+            "strategy": res.placement.strategy,
+            "explored": res.placement.explored,
+            "stage0_s": res.stage0_s,
+            "placement": {t: res.mesh.pes[p].name
+                          for t, p in sorted(pe_of.items())},
+            "dram_shares": {res.mesh.pes[p].name: s
+                            for p, s in sorted(res.dram_shares.items())},
+            "pe": {res.mesh.pes[p].name: {
+                "sched_s": res.pe_results[p].makespan_s,
+                "simulated_s": rep.pe_reports[p].makespan_s,
+                "tenants": sorted(t for t, q in pe_of.items() if q == p),
+            } for p in sorted(res.pe_results)},
+        }
+    row["hetero_win"] = row["single_sim_s"] / row["hetero_sim_s"]
+    row["specialization_win"] = row["homog_sim_s"] / row["hetero_sim_s"]
+    return row
+
+
+def emit_mesh_cmp(emit, scenario: str, row: dict) -> None:
+    pre = f"multi_tenant.{scenario}.mesh"
+    emit(f"{pre}.single_sim_s", row["single_sim_s"],
+         f"joint single-PE vck190 (sched={row['single_sched_s']:.6g})")
+    for label in ("homog", "hetero"):
+        d = row[label]
+        placed = " ".join(f"{t}->{p}"
+                          for t, p in sorted(d["placement"].items()))
+        emit(f"{pre}.{label}_sim_s", row[f"{label}_sim_s"],
+             f"pes={'+'.join(d['pe_names'])}; {placed}; "
+             f"strategy={d['strategy']}")
+    emit(f"{pre}.hetero_win", row["hetero_win"],
+         f"single-PE over hetero-mesh simulated makespan "
+         f"(specialization_win={row['specialization_win']:.3f})")
+
+
 def main(emit, scenarios: tuple[str, ...] | None = None,
-         results: dict | None = None) -> dict:
+         results: dict | None = None,
+         mesh_pes: tuple[str, ...] = MESH_PES) -> dict:
     """Full benchmark: per-scenario joint-vs-sequential rows, the
     priority/arrival variants, the vc/qos sweeps, and the stage-1
     comparison.  ``scenarios`` restricts to a subset (the CI smoke test
@@ -639,6 +776,13 @@ def main(emit, scenarios: tuple[str, ...] | None = None,
                              if scenario == "small_trio" else None)
         results[scenario]["stage1"] = cmp_row
         emit_stage1_cmp(emit, scenario, cmp_row)
+
+    # multi-PE mesh: joint single-PE vs homogeneous vs heterogeneous
+    # placement (stage-0 DSE + shared-DRAM demand-weighted shares)
+    for scenario in selected:
+        mrow = mesh_cmp(scenario, pe_names=mesh_pes)
+        results[scenario]["mesh"] = mrow
+        emit_mesh_cmp(emit, scenario, mrow)
 
     # analytic vs pipeline stage-1 latency pricing, per scenario
     for scenario in selected:
@@ -777,6 +921,15 @@ if __name__ == "__main__":
     ap.add_argument("--qos", action="store_true",
                     help="only run the weighted-fair QoS sweep "
                          "(3 tenants, explicit bandwidth shares, wfq)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="only run the multi-PE mesh comparison (joint "
+                         "single-PE vs homogeneous vs heterogeneous "
+                         "DoraMesh with stage-0 placement)")
+    ap.add_argument("--mesh-pe", metavar="NAMES", default=",".join(MESH_PES),
+                    help="comma-separated PE template names for the "
+                         "heterogeneous mesh variant (choices: "
+                         f"{', '.join(sorted(PE_TEMPLATES))}; "
+                         f"default: {','.join(MESH_PES)})")
     ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
                     help="restrict the full benchmark to one scenario "
                          "(the CI smoke test runs small_pair)")
@@ -789,6 +942,14 @@ if __name__ == "__main__":
     if args.qos and args.scenario:
         ap.error("--qos runs the fixed small_trio weighted-fair sweep; "
                  "--scenario cannot be combined with it")
+    if args.mesh and (args.qos or args.vc is not None):
+        ap.error("--mesh runs only the mesh comparison; it cannot be "
+                 "combined with --qos/--vc")
+    mesh_pes = tuple(n.strip() for n in args.mesh_pe.split(",") if n.strip())
+    try:
+        mesh_pe_templates(mesh_pes)
+    except ValueError as e:
+        ap.error(str(e))
     print("name,value,derived")
 
     def _emit(name, value, derived=""):
@@ -801,6 +962,11 @@ if __name__ == "__main__":
         sw = qos_sweep()
         results["small_trio"] = {"qos_sweep": sw}
         emit_qos_sweep(_emit, "small_trio", sw)
+    elif args.mesh:
+        for scenario in (args.scenario,) if args.scenario else SCENARIOS:
+            mrow = mesh_cmp(scenario, pe_names=mesh_pes)
+            results.setdefault(scenario, {})["mesh"] = mrow
+            emit_mesh_cmp(_emit, scenario, mrow)
     elif args.vc is not None:
         vcs = (1, args.vc) if args.vc != 1 else (1,)
         for scenario in (args.scenario,) if args.scenario else SCENARIOS:
@@ -809,7 +975,8 @@ if __name__ == "__main__":
             emit_vc_sweep(_emit, scenario, sw)
     else:
         scenarios = (args.scenario,) if args.scenario else None
-        main(_emit, scenarios=scenarios, results=results)
+        main(_emit, scenarios=scenarios, results=results,
+             mesh_pes=mesh_pes)
 
     if args.json:
         with open(args.json, "w") as f:

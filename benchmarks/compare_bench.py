@@ -38,6 +38,17 @@ point) is skipped by ``flatten`` and never compared.  The
 ``engine_race`` rows (``sched_s``, ``simulated_s``, ``wall_s``,
 ratios) are diagnostics, deliberately outside every gated key set.
 
+Mesh rows (``mesh_cmp``: multi-PE placement vs the joint single-PE
+schedule) gate like every other simulation: ``single_sim_s`` /
+``homog_sim_s`` / ``hetero_sim_s`` match the ``_sim_s`` suffix rule, so
+a >10 % mesh-makespan regression fails the build, and ``hetero_win``
+(single-PE over hetero-mesh simulated makespan) gates higher-is-better
+— it dropping below the baseline by the time threshold means
+specialized placement stopped beating the single PE.  The per-PE
+``sched_s`` / ``simulated_s`` detail rows and the placement/share maps
+are diagnostics: a placement flip re-partitions per-PE load by design,
+only the mesh-level makespan is a promise.
+
 Tuning rows (PR 9) gate on both sides of the loop: the offline
 ``autotune`` rows' ``best_sim_s`` gates like any simulated makespan
 and ``recovery_ratio`` (hand-picked over autotuned makespan) gates as
@@ -70,9 +81,10 @@ _GATED_PARENTS = ("solo_sim",)
 _TIME_PARENTS = ("compile",)
 _TIME_KEYS = ("stage1_vectorized_s", "stage1_memo_warm_s")
 # higher-is-better rows: a *drop* beyond --time-threshold fails
-# (stage-1 speedup, autotune recovery, adaptive-vs-static margin)
+# (stage-1 speedup, autotune recovery, adaptive-vs-static margin,
+# heterogeneous-mesh win over the single PE)
 _TIME_HIGHER_BETTER = ("stage1_speedup", "recovery_ratio",
-                       "adaptive_margin")
+                       "adaptive_margin", "hetero_win")
 _TIME_FLOOR_S = 0.005
 # online-serving leaves (bench_serving.py): per-tenant p99 tail
 # latencies gate relatively like makespans; SLO-violation rates gate on

@@ -1,7 +1,8 @@
 """DORA core: ISA, two-stage DSE compiler, schedulers, codegen,
 simulator and functional runtime (the paper's primary contribution)."""
 
-from .arch_gen import ArchTemplate, generate_platform, search_template
+from .arch_gen import (ArchTemplate, generate_platform,
+                       search_mesh_templates, search_template)
 from .codegen import CodegenResult, MemoryMap, generate
 from .compiler import CompileOptions, CompileResult, DoraCompiler
 from .ga import GAConfig, GAResult, GAScheduler
@@ -10,9 +11,12 @@ from .interleave import (apply_permutation, interleave_stream,
                          plan_interleave, validate_stream)
 from .isa import (Epilogue, Instruction, LMUBody, LmuRole, MIUBody, MMUBody,
                   OpType, Program, SFUBody, UnitKind, disassemble, mk)
+from .mesh import (EXHAUSTIVE_LIMIT, DoraMesh, DoraMeshCompiler,
+                   MeshCompileResult, MeshSimReport, PESpec, Placement,
+                   solve_placement)
 from .milp import MilpScheduler, SolveResult
-from .multi_tenant import (QOS_POLICIES, MergedWorkload, MultiTenantWorkload,
-                           TenantSpec)
+from .multi_tenant import (PLACEMENT_STRATEGIES, QOS_POLICIES,
+                           MergedWorkload, MultiTenantWorkload, TenantSpec)
 from .partition import PartitionedResult, partitioned_solve, split_segments
 from .perf_model import (LATENCY_MODELS, VC_ARBITRATIONS, CandidateMode,
                          DoraPlatform, Policy, TilePlan, TpuGemmTiles,
@@ -27,14 +31,16 @@ from .runtime import DoraRuntime
 from .schedule import (InterleaveBound, OversubscriptionBound, Schedule,
                        ScheduleEntry, dispatch_overlap_s,
                        interleave_aware_bound, list_schedule,
-                       oversubscription_aware_bound, sequential_schedule)
+                       makespan_lower_bound, oversubscription_aware_bound,
+                       sequential_schedule)
 from .serving import (ADMISSION_POLICIES, DISPATCH_MODES, DispatchEvent,
                       DispatchRound, DynamicDispatcher, Request,
                       RequestRecord, RequestStream, ServingConfig,
                       ServingResult, ServingSimulator, ServingStats,
                       TenantStream, serve)
 from .simulator import (IncrementalSimulator, SimReport, TenantSimStats,
-                        TenantTelemetry, nearest_rank, simulate)
+                        TenantTelemetry, nearest_rank, simulate,
+                        simulate_mesh)
 from .tuning import (TUNE_OBJECTIVES, AdaptiveSharePolicy, KnobConfig,
                      KnobSpace, ShareDecision, TuneResult, TuneTrial,
                      autotune, step_trace)

@@ -79,6 +79,34 @@ def evaluate_template(template: ArchTemplate,
     return total / max(len(graphs), 1)
 
 
+def search_mesh_templates(graph_groups: Sequence[Sequence[WorkloadGraph]],
+                          area_budget: float | None = 600.0,
+                          mmu_options: Sequence[int] = (2, 4, 6, 8),
+                          lmu_options: Sequence[int] = (8, 14, 20),
+                          sfu_options: Sequence[int] = (1, 3),
+                          latency_model: str = "analytic",
+                          ) -> list[ArchTemplate]:
+    """One specialized ``ArchTemplate`` per PE of a heterogeneous mesh
+    (Herald-style): ``graph_groups[k]`` is the model set PE *k* is being
+    sized for, and the per-PE search prices candidate tables at
+    ``1 / n_pes`` of the DRAM bandwidth — the share an equal-weight
+    ``DoraMesh`` grants when every PE is occupied — so templates are
+    chosen for the bandwidth they will actually see behind the shared
+    DRAM, not the full solo port.  ``area_budget`` bounds *each* PE
+    (pass the single-PE budget divided by N for an area-neutral
+    comparison against one big PE)."""
+    if not graph_groups:
+        raise ValueError("search_mesh_templates: no PE graph groups")
+    share = 1.0 / len(graph_groups)
+    return [search_template(group, mmu_options=mmu_options,
+                            lmu_options=lmu_options,
+                            sfu_options=sfu_options,
+                            area_budget=area_budget,
+                            bandwidth_share=share,
+                            latency_model=latency_model)[0]
+            for group in graph_groups]
+
+
 def search_template(graphs: Sequence[WorkloadGraph],
                     mmu_options: Sequence[int] = (2, 4, 6, 8),
                     lmu_options: Sequence[int] = (8, 14, 20),
@@ -99,5 +127,9 @@ def search_template(graphs: Sequence[WorkloadGraph],
                                           latency_model=latency_model)
                 if best is None or score < best[1]:
                     best = (t, score)
-    assert best is not None
+    if best is None:
+        floor = ArchTemplate(min(mmu_options), min(lmu_options),
+                             min(sfu_options)).resource_cost()
+        raise ValueError(f"no template fits area_budget={area_budget} "
+                         f"(cheapest candidate costs {floor})")
     return best

@@ -20,7 +20,8 @@ from .ga import GAConfig, GAScheduler
 from .graph import WorkloadGraph
 from .interleave import POLICIES as INTERLEAVE_POLICIES
 from .milp import MilpScheduler, SolveResult
-from .multi_tenant import QOS_POLICIES, MultiTenantWorkload
+from .multi_tenant import (PLACEMENT_STRATEGIES, QOS_POLICIES,
+                           MultiTenantWorkload)
 from .partition import partitioned_solve
 from .perf_model import (LATENCY_MODELS, CandidateMode, DoraPlatform, Policy,
                          build_candidate_table)
@@ -60,6 +61,14 @@ class CompileOptions:
     # ``share_aware_stage1`` (default: on iff the workload carries
     # explicit bandwidth_shares).
     share_aware_stage1: bool | None = None
+    # tenant->PE placement strategy for multi-PE mesh compiles
+    # (multi_tenant.PLACEMENT_STRATEGIES: "exhaustive" | "lpt" | "auto");
+    # consumed by mesh.DoraMeshCompiler as the stage-0 solver above the
+    # two-stage DSE.  None defers to the workload's own
+    # ``MultiTenantWorkload.placement`` (default "auto").  A single-PE
+    # DoraCompiler validates the knob and otherwise ignores it — there
+    # is only one PE to place onto.
+    placement: str | None = None
     # stage-1 latency pricing model (perf_model.LATENCY_MODELS):
     # "analytic" is layer_latency's perfect-overlap steady state (the
     # classic table); "pipeline" is pipeline_layer_latency's explicit
@@ -222,6 +231,11 @@ class DoraCompiler:
         if latency_model not in LATENCY_MODELS:
             raise ValueError(f"unknown latency_model {latency_model!r}; "
                              f"expected one of {LATENCY_MODELS}")
+        if options.placement is not None \
+                and options.placement not in PLACEMENT_STRATEGIES:
+            raise ValueError(f"unknown placement strategy "
+                             f"{options.placement!r}; expected one of "
+                             f"{PLACEMENT_STRATEGIES}")
 
         t0 = time.perf_counter()
         layer_shares = ({lid: shares[ti] for lid, ti in tenant_of.items()}

@@ -42,6 +42,16 @@ TENANT_SEP = "::"
 # workload: "wfq" when it carries bandwidth_shares, "none" otherwise)
 QOS_POLICIES = ("none", "wfq")
 
+# Tenant->PE placement strategies accepted by CompileOptions.placement
+# and MultiTenantWorkload.placement (consumed by mesh.DoraMeshCompiler;
+# a single-PE DoraCompiler validates and ignores the knob):
+#   exhaustive — branch-and-bound over every assignment (exact);
+#   lpt        — longest-processing-time greedy seed refined by a
+#                node-capped branch-and-bound with a lower-bound prune;
+#   auto       — exhaustive while n_pes ** n_tenants stays small,
+#                lpt beyond (mesh.EXHAUSTIVE_LIMIT).
+PLACEMENT_STRATEGIES = ("auto", "exhaustive", "lpt")
+
 
 @dataclass(frozen=True)
 class TenantSpec:
@@ -100,6 +110,13 @@ class MultiTenantWorkload:
     ``bandwidth_shares`` are set and QoS resolves to "wfq".  A
     ``CompileOptions.share_aware_stage1`` value overrides it per
     compile.
+
+    ``placement`` is the mesh stage-0 knob: the tenant->PE placement
+    strategy (one of ``PLACEMENT_STRATEGIES``) a ``DoraMeshCompiler``
+    uses when this workload is compiled onto a multi-PE ``DoraMesh``.
+    None (default) defers to "auto"; a ``CompileOptions.placement``
+    value overrides it per compile; a single-PE ``DoraCompiler``
+    validates and ignores it.
     """
 
     name: str
@@ -108,6 +125,7 @@ class MultiTenantWorkload:
     interleave: str = "none"
     bandwidth_shares: dict[str, float] | None = None
     share_aware_stage1: bool | None = None
+    placement: str | None = None
 
     def add_tenant(self, name: str, graph: WorkloadGraph,
                    priority: float = 1.0,
@@ -125,7 +143,8 @@ class MultiTenantWorkload:
     def with_knobs(self, *, bandwidth_shares: dict[str, float] | None = None,
                    interleave: str | None = None,
                    mmu_cap: int | None = None,
-                   share_aware_stage1: bool | None = None
+                   share_aware_stage1: bool | None = None,
+                   placement: str | None = None
                    ) -> MultiTenantWorkload:
         """A copy of this workload with workload-level knobs replaced —
         the auto-tuner's trial surface (``tuning.autotune`` re-knobs
@@ -142,10 +161,53 @@ class MultiTenantWorkload:
                               else dict(bandwidth_shares)),
             share_aware_stage1=(self.share_aware_stage1
                                 if share_aware_stage1 is None
-                                else share_aware_stage1))
+                                else share_aware_stage1),
+            placement=self.placement if placement is None else placement)
+        if mt.placement is not None and mt.placement not in \
+                PLACEMENT_STRATEGIES:
+            raise ValueError(f"{self.name}: unknown placement strategy "
+                             f"{mt.placement!r}; expected one of "
+                             f"{PLACEMENT_STRATEGIES}")
         if mt.bandwidth_shares is not None:
             mt.resolve_bandwidth_shares()    # validate the new shares
         return mt
+
+    def subset(self, indices: list[int],
+               name: str | None = None) -> MultiTenantWorkload:
+        """The sub-workload holding the given tenant indices (original
+        declaration order) — the per-PE compile input the mesh
+        placement stage hands to each PE's ``DoraCompiler``.
+
+        Knobs are inherited; explicit ``bandwidth_shares`` keep only
+        the placed tenants' entries (and collapse to None when none of
+        the placed tenants had one, so a share-less sub-workload falls
+        back to priority-proportional shares exactly like a fresh
+        workload would).  The frozen ``TenantSpec``s are shared, not
+        copied, so ``subset(range(len(tenants)))`` compiles bit-for-bit
+        identically to the full workload — the N=1 mesh lock."""
+        if not indices:
+            raise ValueError(f"{self.name}: subset of no tenants")
+        seen: set[int] = set()
+        for ti in indices:
+            if not 0 <= ti < len(self.tenants):
+                raise ValueError(f"{self.name}: tenant index {ti} out of "
+                                 f"range (have {len(self.tenants)})")
+            if ti in seen:
+                raise ValueError(f"{self.name}: duplicate tenant index {ti}")
+            seen.add(ti)
+        order = sorted(indices)
+        tenants = [self.tenants[ti] for ti in order]
+        shares = None
+        if self.bandwidth_shares is not None:
+            kept = {t.name: self.bandwidth_shares[t.name] for t in tenants
+                    if t.name in self.bandwidth_shares}
+            shares = kept or None
+        return MultiTenantWorkload(
+            self.name if name is None else name, tenants,
+            mmu_cap=self.mmu_cap, interleave=self.interleave,
+            bandwidth_shares=shares,
+            share_aware_stage1=self.share_aware_stage1,
+            placement=self.placement)
 
     def resolve_bandwidth_shares(self) -> dict[int, float]:
         """Tenant index -> guaranteed DRAM bandwidth fraction.

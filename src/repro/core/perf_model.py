@@ -112,6 +112,17 @@ class DoraPlatform:
         values are validated by ``__post_init__``."""
         return replace(self, vc_count=vc_count, vc_arbitration=arbitration)
 
+    def with_dram_bw(self, dram_bw_bytes: float) -> "DoraPlatform":
+        """Same platform behind a different DRAM port bandwidth — how a
+        mesh PE views the *shared* DRAM (``mesh.DoraMesh``): the mesh
+        swaps each PE's private port rate for the shared aggregate,
+        then prices the PE's guaranteed fraction of it via
+        ``share_scaled_platform``."""
+        if dram_bw_bytes <= 0.0:
+            raise ValueError(
+                f"dram_bw_bytes must be > 0, got {dram_bw_bytes}")
+        return replace(self, dram_bw_bytes=dram_bw_bytes)
+
     @classmethod
     def tpu_v5e(cls) -> "DoraPlatform":
         """TPU v5e viewed through the DORA template: one MXU-equipped

@@ -223,6 +223,48 @@ def list_schedule(graph: WorkloadGraph,
     return Schedule(entries)
 
 
+def makespan_lower_bound(graph: WorkloadGraph,
+                         candidates: dict[int, list[CandidateMode]],
+                         platform: DoraPlatform,
+                         release: dict[int, float] | None = None) -> float:
+    """Engine-independent lower bound on *any* schedule's makespan:
+    the larger of
+
+      - the release-respecting critical path with every layer priced at
+        its fastest candidate mode, and
+      - the per-unit-class area bounds — the total of each layer's
+        cheapest unit-seconds (min over modes of latency * units)
+        spread over the platform's unit count,
+
+    both ignoring dispatch overlap (which only makes real schedules
+    longer).  The mesh placement stage uses this to prune tenant->PE
+    assignments without running a stage-2 engine
+    (``mesh.DoraMeshCompiler``): no placement of a tenant on a PE can
+    ever beat this value on that PE."""
+    release = release or {}
+    best = {lid: min(m.latency_s for m in modes)
+            for lid, modes in candidates.items()}
+    finish: dict[int, float] = {}
+    for l in graph.topo_order():
+        start = max((finish[d] for d in l.deps),
+                    default=0.0)
+        finish[l.id] = max(start, release.get(l.id, 0.0)) + best[l.id]
+    path = max(finish.values(), default=0.0)
+    area = {"lmu": 0.0, "mmu": 0.0, "sfu": 0.0}
+    for lid, modes in candidates.items():
+        area["lmu"] += min(m.latency_s * m.n_lmu for m in modes)
+        area["mmu"] += min(m.latency_s * m.n_mmu for m in modes)
+        area["sfu"] += min(m.latency_s * m.n_sfu for m in modes)
+    # units cannot run before the earliest release; only sound when
+    # every layer carries one (a partial release map defaults to 0)
+    earliest = (min(release.values())
+                if release and len(release) >= len(candidates) else 0.0)
+    return max(path,
+               earliest + area["lmu"] / max(platform.n_lmu, 1),
+               earliest + area["mmu"] / max(platform.n_mmu, 1),
+               earliest + area["sfu"] / max(platform.n_sfu, 1))
+
+
 # ---------------------------------------------------------------------------
 # Interleave-aware schedule bound (QoS)
 # ---------------------------------------------------------------------------

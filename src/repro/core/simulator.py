@@ -73,7 +73,8 @@ from dataclasses import dataclass, field
 
 from .codegen import CodegenResult
 from .isa import OpType, UnitKind
-from .perf_model import VC_ARBITRATIONS, DoraPlatform
+from .perf_model import (VC_ARBITRATIONS, DoraPlatform,
+                         share_scaled_platform)
 
 _MIU_OPS = (OpType.MIU_LOAD, OpType.MIU_STORE)
 
@@ -376,6 +377,49 @@ def simulate(result: CodegenResult, platform: DoraPlatform,
         return _simulate_vc(result, platform, arrivals, priorities,
                             bandwidth_shares)
     return _simulate_inorder(result, platform, arrivals)
+
+
+def simulate_mesh(codegens: list[CodegenResult],
+                  platforms: list[DoraPlatform],
+                  dram_shares: list[float] | None = None,
+                  arrivals: list[dict[int, float] | None] | None = None,
+                  priorities: list[dict[int, float] | None] | None = None,
+                  bandwidth_shares: list[dict[int, float] | None]
+                  | None = None) -> list[SimReport]:
+    """Per-PE replay of a placed mesh compile (``mesh.DoraMeshCompiler``).
+
+    Each PE's program replays independently on its own platform —
+    cross-PE coupling is *only* through the shared DRAM, priced by
+    share-scaling each PE's platform to its granted fraction of the
+    aggregate bandwidth (``share_scaled_platform``, the same machinery
+    the per-tenant QoS bound uses).  ``platforms[k]`` is PE *k*'s view
+    of the shared DRAM port (``DoraPlatform.with_dram_bw``), and
+    ``dram_shares[k]`` its guaranteed fraction (default 1.0; a full
+    share leaves the platform bit-identical, the N=1 lock).  The
+    per-PE ``arrivals`` / ``priorities`` / ``bandwidth_shares`` carry
+    the usual per-tenant dicts, keyed by each PE's *local* tenant
+    indices."""
+    n = len(codegens)
+    if len(platforms) != n:
+        raise ValueError(f"simulate_mesh: {n} programs but "
+                         f"{len(platforms)} platforms")
+    shares = dram_shares if dram_shares is not None else [1.0] * n
+    if len(shares) != n:
+        raise ValueError(f"simulate_mesh: {n} programs but "
+                         f"{len(shares)} dram_shares")
+    if sum(shares) > 1.0 + 1e-9 and n > 1:
+        raise ValueError(f"simulate_mesh: dram_shares sum to "
+                         f"{sum(shares):.6g} > 1")
+    reports: list[SimReport] = []
+    for k in range(n):
+        plat = share_scaled_platform(platforms[k], shares[k])
+        reports.append(simulate(
+            codegens[k], plat,
+            arrivals=arrivals[k] if arrivals else None,
+            priorities=priorities[k] if priorities else None,
+            bandwidth_shares=bandwidth_shares[k] if bandwidth_shares
+            else None))
+    return reports
 
 
 def _simulate_inorder(result: CodegenResult, platform: DoraPlatform,

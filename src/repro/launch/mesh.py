@@ -33,3 +33,17 @@ def make_local_mesh(model_axis: int = 1):
     n = len(jax.devices())
     assert n % model_axis == 0
     return _make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_pe_mesh(n_pes: int):
+    """Whatever devices exist, as (pe, data): a leading ``pe`` axis with
+    one slot per DORA PE — the jax-side twin of ``core.mesh.DoraMesh``,
+    where each mesh PE's replay/dispatch work shards onto its own device
+    row.  ``n_pes`` must divide the available device count."""
+    if n_pes < 1:
+        raise ValueError(f"n_pes must be >= 1, got {n_pes}")
+    n = len(jax.devices())
+    if n % n_pes:
+        raise ValueError(f"n_pes={n_pes} does not divide the "
+                         f"{n} available devices")
+    return _make_mesh((n_pes, n // n_pes), ("pe", "data"))

@@ -29,7 +29,11 @@ from repro.core import schedule as schedule_mod
 from repro.core.compiler import ENGINES, CompileOptions, CompileResult
 from repro.core.isa import (Body, Epilogue, LMUBody, LmuRole, MIUBody,
                             MMUBody, OpType, SFUBody, UnitKind)
-from repro.core.multi_tenant import QOS_POLICIES, MultiTenantWorkload
+from repro.core import mesh as mesh_mod
+from repro.core.mesh import (DoraMesh, DoraMeshCompiler, MeshCompileResult,
+                             MeshSimReport, PESpec, Placement)
+from repro.core.multi_tenant import (PLACEMENT_STRATEGIES, QOS_POLICIES,
+                                     MultiTenantWorkload)
 from repro.core.perf_model import (LATENCY_MODELS, VC_ARBITRATIONS,
                                    CandidateMode, DoraPlatform, Policy,
                                    TilePlan)
@@ -53,6 +57,7 @@ SCHED_MD = DOCS / "SCHEDULING.md"
 PERF_MD = DOCS / "PERF_MODEL.md"
 SERVING_MD = DOCS / "SERVING.md"
 TUNING_MD = DOCS / "TUNING.md"
+MESH_MD = DOCS / "MESH.md"
 CORE = REPO / "src" / "repro" / "core"
 
 
@@ -524,6 +529,104 @@ def test_bench_artifact_has_tuning_rows():
     assert adaptive["worst_surger_p99_s"] < best_static
 
 
+# ------------------------------------------------------ MESH.md sync checks
+
+@pytest.fixture(scope="module")
+def mesh_tokens() -> set[str]:
+    assert MESH_MD.is_file(), "docs/MESH.md is missing"
+    return _code_spans(MESH_MD.read_text())
+
+
+def test_mesh_md_documents_the_mesh_surface(mesh_tokens):
+    """The walkthrough must name the whole scale-out surface: topology
+    types, the placement solver, the shared-DRAM pricing helpers, the
+    per-PE compile/simulate entry points, and the knobs."""
+    needed = {"DoraMesh", "PESpec", "DoraMeshCompiler", "MeshCompileResult",
+              "MeshSimReport", "Placement", "solve_placement",
+              "dram_shares", "pricing_platform", "pe_port_platform",
+              "with_dram_bw", "share_scaled_platform", "simulate_mesh",
+              "makespan_lower_bound", "subset", "search_mesh_templates",
+              "EXHAUSTIVE_LIMIT", "LPT_NODE_BUDGET", "weight",
+              "dram_bw_bytes", "placement", "make_pe_mesh", "mesh_cmp",
+              "PE_TEMPLATES", "mesh_pe_templates", "hetero_win"}
+    missing = needed - mesh_tokens
+    assert not missing, (f"mesh surface missing from "
+                         f"docs/MESH.md: {missing}")
+
+
+def test_mesh_md_placement_values_match_code(mesh_tokens):
+    """The knob row's strategy list must be exactly the code tuple —
+    both directions (a missing or ghost strategy name fails)."""
+    text = MESH_MD.read_text()
+    m = re.search(r"`placement`[^|]*`PLACEMENT_STRATEGIES`[^|]*?:"
+                  r"((?:\s*`[a-z_]+`\s*\\?\|?)+)", text)
+    assert m, "MESH.md lost its placement strategy value list"
+    documented = set(re.findall(r"`([a-z_]+)`", m.group(1)))
+    assert documented == set(PLACEMENT_STRATEGIES), (
+        f"placement strategies drifted: doc {documented} vs "
+        f"code {set(PLACEMENT_STRATEGIES)}")
+
+
+def test_mesh_md_names_only_real_symbols(mesh_tokens):
+    """Ghost-symbol check: every mesh-flavored token the doc backticks
+    must exist in the mesh module, its dataclasses/methods, the bench,
+    or the launch layer — catches renames and deletions."""
+    names: set[str] = set(dir(mesh_mod)) | set(dir(core_pkg))
+    for cls in (DoraMesh, PESpec, Placement, MeshCompileResult,
+                MeshSimReport, DoraMeshCompiler, DoraPlatform):
+        names |= set(dir(cls))
+        if dataclasses.is_dataclass(cls):
+            names |= {f.name for f in dataclasses.fields(cls)}
+    symbol_like = {
+        t for t in mesh_tokens
+        if t.startswith(("Mesh", "DoraMesh", "PESpec", "Placement",
+                         "PLACEMENT", "EXHAUSTIVE", "LPT",
+                         "pe_", "mesh_", "dram_", "placement"))
+        or t in {"solve_placement", "simulate_mesh", "make_pe_mesh",
+                 "search_mesh_templates", "with_dram_bw",
+                 "pricing_platform", "hetero_win", "PE_TEMPLATES"}}
+    other_src = "\n".join((
+        (REPO / "benchmarks" / "bench_multi_tenant.py").read_text(),
+        (REPO / "src" / "repro" / "launch" / "mesh.py").read_text()))
+    ghosts = {t for t in symbol_like - names
+              if not re.search(rf"\b{re.escape(t)}\b", other_src)}
+    assert not ghosts, (f"docs/MESH.md names nonexistent "
+                        f"symbols: {ghosts}")
+
+
+def test_architecture_md_mentions_mesh_layer():
+    text = ARCH_MD.read_text()
+    for needle in ("mesh.py", "MESH.md", "DoraMesh"):
+        assert needle in text, (
+            f"docs/ARCHITECTURE.md lost its mesh-layer {needle!r} "
+            "reference")
+
+
+def test_bench_artifact_has_mesh_rows():
+    """The committed artifact carries the scale-out acceptance rows:
+    every scenario's mesh comparison exists, the occupied shares are a
+    valid split, and the heterogeneous mesh beats (or ties within 1 %)
+    the joint single-PE schedule somewhere."""
+    import json
+
+    data = json.loads((REPO / "BENCH_multi_tenant.json").read_text())
+    mesh_rows = {s: rows["mesh"] for s, rows in data.items()
+                 if isinstance(rows, dict) and "mesh" in rows}
+    assert mesh_rows, ("no mesh rows in BENCH_multi_tenant.json — "
+                       "regenerate the full artifact")
+    for scenario, row in mesh_rows.items():
+        for label in ("homog", "hetero"):
+            shares = row[label]["dram_shares"]
+            assert sum(shares.values()) <= 1.0 + 1e-9, (
+                f"{scenario}/{label}: shared DRAM oversubscribed")
+            placed = set(row[label]["placement"].values())
+            assert placed <= set(row[label]["pe_names"])
+        assert row["hetero_win"] >= 0.99, (
+            f"{scenario}: heterogeneous mesh lost to the single PE")
+    assert any(row["hetero_win"] > 1.05 for row in mesh_rows.values()), (
+        "no scenario shows a real heterogeneous-placement win")
+
+
 # ------------------------------------------- file:line pointer accuracy
 
 _PTR_ADJACENT = re.compile(
@@ -545,7 +648,7 @@ def _resolve_doc_path(path: str) -> Path | None:
 
 @pytest.mark.parametrize("doc", ["ARCHITECTURE.md", "SCHEDULING.md",
                                  "PERF_MODEL.md", "ISA.md", "SERVING.md",
-                                 "TUNING.md"])
+                                 "TUNING.md", "MESH.md"])
 def test_doc_file_line_pointers_resolve(doc):
     """Every `file.py:line` pointer must name an existing file and an
     in-range line; when a backticked symbol directly precedes the

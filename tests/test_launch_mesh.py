@@ -1,0 +1,112 @@
+"""Smoke + shape/axis coverage for the jax-side launch meshes
+(``launch/mesh.py``) and the multi-pod dry-run entry point
+(``launch/dryrun.py``).
+
+The in-process tests use whatever CPU devices jax initialized with;
+anything needing a specific device count (the pe/data mesh rows, the
+16x16 production pod) runs in a subprocess with
+``--xla_force_host_platform_device_count`` set *before* the first jax
+import — the same trick ``dryrun.py`` pins as its first statement.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_py(code: str, device_count: int | None = None,
+            timeout: int = 240) -> subprocess.CompletedProcess:
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    if device_count is not None:
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                            f"{device_count}")
+    return subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True,
+                          timeout=timeout, env=env)
+
+
+# ------------------------------------------------------------ in-process
+
+def test_local_and_pe_mesh_shapes_in_process():
+    jax = pytest.importorskip("jax")
+    from repro.launch.mesh import make_local_mesh, make_pe_mesh
+
+    n = len(jax.devices())
+    local = make_local_mesh()
+    assert local.axis_names == ("data", "model")
+    assert dict(local.shape) == {"data": n, "model": 1}
+
+    pe = make_pe_mesh(1)
+    assert pe.axis_names == ("pe", "data")
+    assert dict(pe.shape) == {"pe": 1, "data": n}
+    assert pe.size == n
+
+
+def test_pe_mesh_validates_its_arguments():
+    jax = pytest.importorskip("jax")
+    from repro.launch.mesh import make_pe_mesh
+
+    with pytest.raises(ValueError, match="n_pes must be >= 1"):
+        make_pe_mesh(0)
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="does not divide"):
+        make_pe_mesh(n + 1)
+
+
+# ----------------------------------------------------------- subprocess
+
+def test_pe_mesh_shards_devices_across_pes():
+    """8 placeholder devices, 4 PEs -> a (4, 2) (pe, data) mesh whose
+    rows partition the device set (each device on exactly one PE)."""
+    proc = _run_py(
+        "import jax\n"
+        "from repro.launch.mesh import make_pe_mesh\n"
+        "m = make_pe_mesh(4)\n"
+        "assert m.axis_names == ('pe', 'data'), m.axis_names\n"
+        "assert dict(m.shape) == {'pe': 4, 'data': 2}, dict(m.shape)\n"
+        "rows = [set(d.id for d in row) for row in m.devices]\n"
+        "assert len(rows) == 4 and all(len(r) == 2 for r in rows)\n"
+        "seen = set().union(*rows)\n"
+        "assert seen == set(range(8)), seen\n"
+        "print('PE-MESH-OK')\n",
+        device_count=8)
+    assert proc.returncode == 0, proc.stderr
+    assert "PE-MESH-OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_production_mesh_shapes_on_512_placeholder_devices():
+    proc = _run_py(
+        "import jax\n"
+        "from repro.launch.mesh import make_production_mesh\n"
+        "m = make_production_mesh()\n"
+        "assert m.axis_names == ('data', 'model'), m.axis_names\n"
+        "assert dict(m.shape) == {'data': 16, 'model': 16}\n"
+        "mm = make_production_mesh(multi_pod=True)\n"
+        "assert mm.axis_names == ('pod', 'data', 'model')\n"
+        "assert dict(mm.shape) == {'pod': 2, 'data': 16, 'model': 16}\n"
+        "assert mm.size == 512\n"
+        "print('PROD-MESH-OK')\n",
+        device_count=512)
+    assert proc.returncode == 0, proc.stderr
+    assert "PROD-MESH-OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_help_exits_zero():
+    """The dry-run CLI stays importable and its flag surface intact —
+    --help must exit 0 (argparse fires before the 512-device assert)."""
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--help"],
+        capture_output=True, text=True, timeout=240, env=env)
+    assert proc.returncode == 0, proc.stderr
+    for flag in ("--arch", "--shape", "--mesh", "--out"):
+        assert flag in proc.stdout, f"{flag} missing from dryrun --help"

@@ -1,0 +1,346 @@
+"""Multi-PE mesh invariants (``core.mesh``) — the property suite that
+locks the scale-out tentpole:
+
+  - N=1 lock: a one-PE mesh compiles and simulates *bit for bit* the
+    single-PE ``DoraCompiler`` path (same schedule entries, same
+    emitted instructions, same simulated event times);
+  - placement is a partition: every tenant lands on exactly one PE, no
+    ghost tenants, no PE index out of range; the exhaustive strategy
+    matches brute force and never loses to the LPT heuristic;
+  - the occupied PEs' DRAM shares sum to exactly 1.0 (never more — the
+    shared port is never oversubscribed), idle PEs hold no share;
+  - the mesh makespan is the max over the per-PE makespans, for both
+    the compile-side schedule and the simulator replay;
+  - conservation: per-tenant stats and instruction counts merge across
+    PEs without loss or duplication;
+  - determinism: the mesh bench comparison is bit-identical across a
+    double run (modulo wall-clock fields);
+  - every unknown-name entry point (placement strategy, PE template)
+    raises a ValueError naming the valid choices.
+"""
+
+import itertools
+import json
+
+import pytest
+
+from _hyp_compat import given, settings, strategies as st
+from repro.core import (EXHAUSTIVE_LIMIT, ArchTemplate, CompileOptions,
+                        DoraCompiler, DoraMesh, DoraMeshCompiler,
+                        DoraPlatform, MultiTenantWorkload, PESpec,
+                        Placement, Policy, build_candidate_table,
+                        list_schedule, makespan_lower_bound, mlp_graph,
+                        search_mesh_templates, simulate_mesh,
+                        solve_placement)
+
+PLAT = DoraPlatform.vck190()
+POLICY = Policy.dora()
+
+
+def _workload(n_tenants: int = 2, name: str = "mesh-wl",
+              **kw) -> MultiTenantWorkload:
+    """Small, cheap, shape-diverse tenants (distinct widths so the
+    stage-1 memo cannot alias them)."""
+    widths = ([256, 256], [128, 512], [512, 128], [256, 128, 256])
+    mt = MultiTenantWorkload(name, **kw)
+    for i in range(n_tenants):
+        mt.add_tenant(f"t{i}", mlp_graph(f"t{i}", 128 + 64 * i,
+                                         widths[i % len(widths)]))
+    return mt
+
+
+def _hetero_mesh(name: str = "hm") -> DoraMesh:
+    return DoraMesh.from_templates(
+        [ArchTemplate(4, 8, 1), ArchTemplate(2, 14, 2)],
+        names=("compute", "memory"), name=name)
+
+
+# ------------------------------------------------------- N=1 bit-for-bit
+
+def test_n1_mesh_is_bit_for_bit_single_pe():
+    """The regression lock of the whole refactor: a one-PE mesh routes
+    through the unchanged DoraCompiler on an *unchanged* platform (full
+    DRAM share == identity), so every artifact — schedule, program,
+    simulated event times, tenant stats — is equal, not just close."""
+    mt = _workload(3)
+    opts = CompileOptions(engine="list")
+    comp = DoraCompiler(PLAT, POLICY)
+    single = comp.compile(mt, opts)
+    single_rep = comp.simulate(single)
+
+    mesh = DoraMesh.homogeneous(1, PLAT, name="n1")
+    mc = DoraMeshCompiler(mesh, POLICY)
+    mres = mc.compile(mt, opts)
+    assert mres.placement.assignment == (0, 0, 0)
+    [pe_res] = mres.pe_results.values()
+    assert mres.dram_shares == {0: 1.0}
+    assert mres.pe_platforms[0] == PLAT
+    assert mres.makespan_s == single.makespan_s
+    assert pe_res.schedule.entries == single.schedule.entries
+    assert (pe_res.codegen.program.instructions
+            == single.codegen.program.instructions)
+    assert pe_res.candidates == single.candidates
+
+    mrep = mc.simulate(mres)
+    [pe_rep] = mrep.pe_reports.values()
+    assert mrep.makespan_s == single_rep.makespan_s
+    assert pe_rep.instr_start == single_rep.instr_start
+    assert mrep.tenant_stats == {
+        mt.tenants[ti].name: s
+        for ti, s in single_rep.tenant_stats.items()}
+
+
+def test_n1_mesh_single_graph_path():
+    g = mlp_graph("solo", 256, [512, 256])
+    opts = CompileOptions(engine="list")
+    comp = DoraCompiler(PLAT, POLICY)
+    single = comp.compile(g, opts)
+    mc = DoraMeshCompiler(DoraMesh.homogeneous(1, PLAT), POLICY)
+    mres = mc.compile(g, opts)
+    [pe_res] = mres.pe_results.values()
+    assert mres.makespan_s == single.makespan_s
+    assert pe_res.schedule.entries == single.schedule.entries
+    assert mc.simulate(mres).makespan_s == comp.simulate(single).makespan_s
+
+
+# -------------------------------------------------- placement properties
+
+_COSTS = st.lists(
+    st.lists(st.integers(min_value=1, max_value=100),
+             min_size=1, max_size=4).map(
+        lambda row: [v / 7.0 for v in row]),
+    min_size=1, max_size=6).map(
+    lambda rows: [row[:len(rows[0])] + [1.0] * (len(rows[0]) - len(row))
+                  for row in rows])
+
+
+@settings(max_examples=60, deadline=None)
+@given(_COSTS, st.sampled_from(["auto", "exhaustive", "lpt"]))
+def test_placement_is_partition_with_consistent_objective(costs, strategy):
+    """No ghosts, no double placement, and the reported proxy makespan
+    is exactly the max PE load the returned assignment implies."""
+    n_t, n_p = len(costs), len(costs[0])
+    if strategy == "exhaustive" and n_p ** n_t > EXHAUSTIVE_LIMIT:
+        strategy = "auto"
+    pl = solve_placement(costs, strategy=strategy)
+    assert isinstance(pl, Placement)
+    assert len(pl.assignment) == n_t
+    assert all(0 <= p < n_p for p in pl.assignment)
+    loads = [0.0] * n_p
+    for t, p in enumerate(pl.assignment):
+        loads[p] += costs[t][p]
+    assert pl.proxy_makespan_s == max(loads)
+    # never below the trivially valid lower bounds
+    assert pl.proxy_makespan_s >= max(min(row) for row in costs) - 1e-12
+    assert (pl.proxy_makespan_s
+            >= sum(min(row) for row in costs) / n_p - 1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_COSTS)
+def test_exhaustive_placement_matches_brute_force(costs):
+    n_t, n_p = len(costs), len(costs[0])
+    if n_p ** n_t > 4096:
+        return
+    pl = solve_placement(costs, strategy="exhaustive")
+
+    # brute-force min over all assignments of the max per-PE load
+    def load_of(assign):
+        loads = [0.0] * n_p
+        for t, p in enumerate(assign):
+            loads[p] += costs[t][p]
+        return max(loads)
+    best = min(load_of(a)
+               for a in itertools.product(range(n_p), repeat=n_t))
+    assert pl.proxy_makespan_s == pytest.approx(best, rel=0, abs=1e-12)
+    # the heuristic never beats the exact optimum
+    lpt = solve_placement(costs, strategy="lpt")
+    assert lpt.proxy_makespan_s >= pl.proxy_makespan_s - 1e-12
+
+
+def test_placement_strategy_validation():
+    with pytest.raises(ValueError, match="placement strategy"):
+        solve_placement([[1.0]], strategy="bogus")
+    with pytest.raises(ValueError, match="ragged or empty"):
+        solve_placement([[1.0, 2.0], [1.0]])
+    with pytest.raises(ValueError, match="no tenants"):
+        solve_placement([])
+    mt = _workload(2)
+    with pytest.raises(ValueError, match="placement strategy"):
+        DoraCompiler(PLAT, POLICY).compile(
+            mt, CompileOptions(engine="list", placement="bogus"))
+    with pytest.raises(ValueError, match="placement"):
+        mt.with_knobs(placement="bogus")
+    with pytest.raises(ValueError, match="placement strategy"):
+        DoraMeshCompiler(DoraMesh.homogeneous(2, PLAT), POLICY).compile(
+            mt, CompileOptions(engine="list", placement="bogus"))
+
+
+# ------------------------------------------------------ DRAM share sums
+
+_WEIGHTS = st.lists(st.integers(min_value=1, max_value=9),
+                    min_size=1, max_size=5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_WEIGHTS, st.integers(min_value=0, max_value=2 ** 5 - 1))
+def test_dram_shares_sum_to_one_over_occupied(weights, mask):
+    mesh = DoraMesh("shares", tuple(
+        PESpec(f"pe{i}", PLAT, weight=float(w))
+        for i, w in enumerate(weights)))
+    occupied = [i for i in range(len(weights)) if mask & (1 << i)]
+    if not occupied:
+        occupied = None                  # default: all PEs occupied
+    shares = mesh.dram_shares(occupied)
+    want = set(occupied if occupied is not None
+               else range(len(weights)))
+    assert set(shares) == want
+    assert all(s > 0.0 for s in shares.values())
+    assert sum(shares.values()) == pytest.approx(1.0, abs=1e-12)
+    # never oversubscribed — the invariant simulate_mesh also enforces
+    assert sum(shares.values()) <= 1.0 + 1e-9
+
+
+def test_mesh_validation():
+    with pytest.raises(ValueError, match="at least one PE"):
+        DoraMesh("empty", ())
+    with pytest.raises(ValueError, match="duplicate PE names"):
+        DoraMesh("dup", (PESpec("a", PLAT), PESpec("a", PLAT)))
+    with pytest.raises(ValueError, match="weight"):
+        PESpec("bad", PLAT, weight=0.0)
+    with pytest.raises(ValueError, match="dram_bw_bytes"):
+        DoraMesh("bw", (PESpec("a", PLAT),), dram_bw_bytes=-1.0)
+    with pytest.raises(ValueError, match="out of range"):
+        DoraMesh.homogeneous(2, PLAT).dram_shares([0, 5])
+    with pytest.raises(ValueError, match="no occupied"):
+        DoraMesh.homogeneous(2, PLAT).dram_shares([])
+
+
+def test_simulate_mesh_rejects_oversubscribed_shares():
+    g = mlp_graph("m", 128, [128])
+    res = DoraCompiler(PLAT, POLICY).compile(g,
+                                             CompileOptions(engine="list"))
+    with pytest.raises(ValueError, match="sum"):
+        simulate_mesh([res.codegen, res.codegen], [PLAT, PLAT],
+                      dram_shares=[0.7, 0.7])
+    with pytest.raises(ValueError, match="platforms"):
+        simulate_mesh([res.codegen], [PLAT, PLAT])
+
+
+# --------------------------------------- mesh makespan and conservation
+
+def test_mesh_makespan_is_max_over_pes_and_stats_conserve():
+    mt = _workload(4, name="conserve")
+    mc = DoraMeshCompiler(_hetero_mesh(), POLICY)
+    res = mc.compile(mt, CompileOptions(engine="list"))
+
+    # schedule side: mesh makespan == max over occupied PE makespans
+    assert res.makespan_s == max(res.pe_makespans().values())
+    assert set(res.pe_results) == set(res.placement.pe_tenants())
+    assert sum(res.dram_shares.values()) == pytest.approx(1.0, abs=1e-12)
+
+    # placement partition reflected in every merged view
+    names = tuple(t.name for t in mt.tenants)
+    assert res.tenant_names == names
+    assert sorted(res.pe_of_tenant()) == sorted(names)
+    assert sorted(res.per_tenant_makespan()) == sorted(names)
+
+    # simulator side: same max rule, stats merge without loss
+    rep = mc.simulate(res)
+    assert rep.makespan_s == max(r.makespan_s
+                                 for r in rep.pe_reports.values())
+    assert sorted(rep.tenant_stats) == sorted(names)
+    assert rep.pe_of_tenant == res.pe_of_tenant()
+    assert rep.n_instructions == sum(len(r.instr_start)
+                                     for r in rep.pe_reports.values())
+    # every instruction belongs to exactly one PE stream
+    per_pe = [len(res.pe_results[p].codegen.program.instructions)
+              for p in sorted(res.pe_results)]
+    assert rep.n_instructions == sum(per_pe)
+
+
+def test_makespan_lower_bound_is_a_lower_bound():
+    for widths in ([256, 256], [128, 512, 128]):
+        g = mlp_graph("lb", 256, widths)
+        table = build_candidate_table(g, PLAT, POLICY)
+        lb = makespan_lower_bound(g, table, PLAT)
+        sched = list_schedule(g, table, PLAT)
+        assert 0.0 < lb <= sched.makespan + 1e-15
+
+
+def test_placement_knob_threads_through_options_and_workload():
+    mt = _workload(2, name="knob", placement="lpt")
+    mc = DoraMeshCompiler(DoraMesh.homogeneous(2, PLAT), POLICY)
+    # workload knob applies when options stay silent
+    res = mc.compile(mt, CompileOptions(engine="list"))
+    assert res.placement.strategy == "lpt"
+    # options override the workload knob
+    res = mc.compile(mt, CompileOptions(engine="list",
+                                        placement="exhaustive"))
+    assert res.placement.strategy == "exhaustive"
+    # single-PE compiler validates but ignores the knob
+    single = DoraCompiler(PLAT, POLICY).compile(
+        mt, CompileOptions(engine="list", placement="lpt"))
+    assert single.makespan_s > 0.0
+
+
+def test_search_mesh_templates_one_per_group():
+    g_a = mlp_graph("ga", 256, [512, 512])
+    g_b = mlp_graph("gb", 128, [128, 128])
+    tpls = search_mesh_templates([[g_a], [g_b]],
+                                 mmu_options=(2, 4), lmu_options=(8,),
+                                 sfu_options=(1,), area_budget=300.0)
+    assert len(tpls) == 2
+    assert all(t.resource_cost() <= 300.0 for t in tpls)
+    with pytest.raises(ValueError, match="area_budget"):
+        search_mesh_templates([[g_a]], mmu_options=(8,), lmu_options=(20,),
+                              sfu_options=(3,), area_budget=10.0)
+    with pytest.raises(ValueError, match="no PE graph groups"):
+        search_mesh_templates([])
+
+
+# -------------------------------------------- bench scenario determinism
+
+def _load_bench():
+    import importlib.util
+    from pathlib import Path
+
+    path = Path(__file__).resolve().parent.parent / "benchmarks" \
+        / "bench_multi_tenant.py"
+    spec = importlib.util.spec_from_file_location("_mesh_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _strip_wall_clock(node):
+    """Drop wall-clock-only fields before the bit-identical compare."""
+    if isinstance(node, dict):
+        return {k: _strip_wall_clock(v) for k, v in node.items()
+                if k != "stage0_s"}
+    if isinstance(node, list):
+        return [_strip_wall_clock(v) for v in node]
+    return node
+
+
+@pytest.mark.slow
+def test_mesh_bench_scenario_is_deterministic():
+    """Double-run of the bench's mesh comparison: identical placement,
+    shares, and makespans (wall-clock fields stripped) — the mesh rows
+    CI gates must not flap."""
+    bench = _load_bench()
+    a = bench.mesh_cmp("small_pair")
+    b = bench.mesh_cmp("small_pair")
+    assert (json.dumps(_strip_wall_clock(a), sort_keys=True)
+            == json.dumps(_strip_wall_clock(b), sort_keys=True))
+    # and the acceptance headline: the heterogeneous mesh beats (or
+    # ties within noise) the joint single-PE schedule
+    assert a["hetero_win"] >= 0.99, a["hetero_win"]
+
+
+def test_bench_rejects_unknown_pe_template():
+    bench = _load_bench()
+    with pytest.raises(ValueError, match="valid choices.*balanced"):
+        bench.mesh_pe_templates(("bogus",))
+    got = bench.mesh_pe_templates(("compute", "memory"))
+    assert [t.n_mmu for t in got] == [4, 2]

@@ -200,6 +200,32 @@ def test_solo_qwen_sched_vs_sim_ratio_shrinks():
     assert ratio["pipeline"] >= 1.0 / 1.15, ratio
 
 
+def test_solo_bert_s_pipeline_ratio_outlier_characterized():
+    """BERT-S is the documented outlier of the pipeline-pricing win:
+    unlike qwen3-4b (ratio -> ~1), its solo pipeline-priced ratio stays
+    near ~1.17.  Its blocks are *small* (seq 128, hidden 512), so the
+    residual schedule-vs-simulator gap is not within-layer fill/drain
+    (which pipeline pricing models) but *cross-layer* in-order MIU
+    issue serialization between many short layers — per-layer pricing
+    cannot see it by construction.  Characterize, don't chase: the
+    ratio is locked into [1.05, 1.30] (measured 1.164) so a future
+    cross-layer model that closes it — or a pricing regression that
+    widens it — both surface here."""
+    from repro.configs import paper_models
+    g = paper_models.get("BERT-S")
+    comp = DoraCompiler(PLAT, POLICY)
+    ratio = {}
+    for model in LATENCY_MODELS:
+        res = comp.compile(g, CompileOptions(engine="list",
+                                             latency_model=model))
+        ratio[model] = comp.simulate(res).makespan_s / res.makespan_s
+    # the analytic gap is the usual ~1.55x within-layer serialization
+    assert ratio["analytic"] > 1.4, ratio
+    # pipeline pricing recovers most but NOT all of it on BERT-S
+    assert 1.05 <= ratio["pipeline"] <= 1.30, ratio
+    assert ratio["pipeline"] < ratio["analytic"], ratio
+
+
 # ---------------------------------------- bounds under pipeline pricing
 
 def _contended_pair(**kw) -> MultiTenantWorkload:
